@@ -1,0 +1,36 @@
+"""Fig 6 analog: memory-depth customization options.
+
+Sweeps the accelerator's instruction-memory depth (the eFPGA BRAM
+customization) and reports the BRAM-byte budget of each depth plus which of
+the paper's edge datasets fit (the vertical lines in Fig 6)."""
+
+from __future__ import annotations
+
+from repro.core.runtime import AcceleratorConfig
+from .tm_bench_common import trained_tm
+
+DATASETS = ("emg", "har", "gesture", "sensorless", "gas")
+DEPTHS = (1 << 12, 1 << 13, 1 << 14, 1 << 15, 1 << 16)
+
+
+def run():
+    rows = []
+    needs = {}
+    for name in DATASETS:
+        tm = trained_tm(name)
+        needs[name] = (tm.model.n_instructions, tm.cfg.n_features)
+        rows.append((
+            f"fig6/{name}_required_depth", 0.0,
+            f"instructions={tm.model.n_instructions};features={tm.cfg.n_features}",
+        ))
+    for depth in DEPTHS:
+        acfg = AcceleratorConfig(
+            instruction_capacity=depth, feature_capacity=1 << 12,
+            class_capacity=16, batch_words=1,
+        )
+        fitting = [n for n, (i, f) in needs.items() if i <= depth and f <= 1 << 12]
+        rows.append((
+            f"fig6/depth_{depth}_bram_bytes", 0.0,
+            f"bram={acfg.bram_bytes};fits={'+'.join(fitting) or 'none'}",
+        ))
+    return rows

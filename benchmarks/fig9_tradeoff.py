@@ -1,0 +1,116 @@
+"""Fig 9 / Fig 1 analog: the flexibility-vs-speed trade-off.
+
+The paper trades throughput for runtime tunability (interpreter) against
+MATADOR's hardwired per-model circuits.  The same trade exists one level up
+in this framework:
+
+  * ``interp``  — the faithful sequential interpreter (fully tunable: new
+    model = new buffer contents, zero recompiles)
+  * ``plan``    — decoded-plan parallel executor (tunable; plan rebuilt on
+    the host in O(I))
+  * ``dense``   — bitpacked dense clause evaluation (the MATADOR analog:
+    specialized to a model SIZE; fastest batched path, recompiles when the
+    architecture changes)
+
+All three computed on the same trained models, batch=32 and batch=256.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import include_actions, pack_literals
+from repro.core.compress import decode_to_plan
+from repro.core.interp import interpret_stream, pack_features, pad_plan, plan_class_sums
+from repro.kernels.clause_eval.ref import clause_eval_ref, class_sums_from_clause_words
+from .tm_bench_common import time_call, trained_tm
+
+DATASETS = ("emg", "gas")
+
+
+def run():
+    rows = []
+    for name in DATASETS:
+        tm = trained_tm(name)
+        cfg, model = tm.cfg, tm.model
+        I = model.n_instructions
+        i_cap = max(1024, 1 << int(np.ceil(np.log2(I + 1))))
+        f_cap = 1 << int(np.ceil(np.log2(cfg.n_features + 1)))
+        imem = np.zeros(i_cap, np.uint16)
+        imem[:I] = model.instructions
+        imem_j = jnp.asarray(imem)
+
+        for B in (32, 256):
+            x = np.resize(tm.x_test, (B, cfg.n_features)).astype(np.uint8)
+            W = B // 32
+
+            def run_interp(xx):
+                packed = pack_features(jnp.asarray(xx), f_cap, W)
+                return interpret_stream(imem_j, jnp.int32(I), packed,
+                                        jnp.int32(B), m_cap=16)
+
+            t_interp = time_call(run_interp, x, repeats=5)
+
+            plan = decode_to_plan(model)
+            ncl = cfg.n_classes * cfg.n_clauses
+            li, ci, cc, cp = (jnp.asarray(a) for a in pad_plan(plan, i_cap, ncl))
+            lits = np.stack([x, 1 - x], -1).reshape(B, -1).astype(np.int8)
+
+            def run_plan(ll):
+                return plan_class_sums(li, ci, cc, cp, jnp.asarray(ll),
+                                       n_clause_cap=ncl, m_cap=16)
+
+            t_plan = time_call(run_plan, lits, repeats=5)
+
+            actions = jnp.asarray(
+                np.asarray(include_actions(cfg, tm.state)).reshape(
+                    cfg.n_classes * cfg.n_clauses, cfg.n_literals
+                ).astype(np.int32)
+            )
+            pol = jnp.tile(
+                jnp.where(jnp.arange(cfg.n_clauses) % 2 == 0, 1, -1), cfg.n_classes
+            ).astype(jnp.int32)
+            packed = pack_literals(jnp.asarray(x))
+
+            def run_dense(pk):
+                words = clause_eval_ref(actions, pk)
+                return class_sums_from_clause_words(words, pol, cfg.n_classes)
+
+            run_dense_j = jax.jit(run_dense)
+            t_dense = time_call(run_dense_j, packed, repeats=5)
+
+            # MXU formulation (kernels/clause_matmul ref): clause = zero-
+            # violation integer matmul — the systolic-array adaptation
+            from repro.kernels.clause_matmul.ref import clause_matmul_ref
+
+            lits_T = jnp.asarray(lits.T.astype(np.int32))  # [2F, B]
+
+            def run_mxu(ll):
+                fired = clause_matmul_ref(actions, ll).astype(jnp.int32)
+                return (fired * pol[:, None]).reshape(
+                    cfg.n_classes, cfg.n_clauses, -1
+                ).sum(axis=1)
+
+            run_mxu_j = jax.jit(run_mxu)
+            t_mxu = time_call(run_mxu_j, lits_T, repeats=5)
+
+            rows.append((
+                f"fig9/{name}_B{B}_interp_us", round(t_interp * 1e6, 1),
+                f"per_dp_us={t_interp / B * 1e6:.2f}",
+            ))
+            rows.append((
+                f"fig9/{name}_B{B}_plan_us", round(t_plan * 1e6, 1),
+                f"speedup_vs_interp={t_interp / t_plan:.1f}x",
+            ))
+            rows.append((
+                f"fig9/{name}_B{B}_dense_us", round(t_dense * 1e6, 1),
+                f"speedup_vs_interp={t_interp / t_dense:.1f}x",
+            ))
+            rows.append((
+                f"fig9/{name}_B{B}_mxu_us", round(t_mxu * 1e6, 1),
+                f"speedup_vs_interp={t_interp / t_mxu:.1f}x",
+            ))
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table2,fig6,fig9]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+Wall times are CPU-container measurements of the jitted JAX paths; the
+eFPGA-model columns (cycles/latency/energy) are derived from the paper's
+published pipeline/frequency constants (see tm_bench_common.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+ALL = ("table1", "table2", "fig6", "fig9")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=",".join(ALL))
+    args = ap.parse_args()
+    wanted = [w.strip() for w in args.only.split(",") if w.strip()]
+
+    print("name,us_per_call,derived")
+    for name in wanted:
+        if name == "table1":
+            from .table1_resources import run as r
+        elif name == "table2":
+            from .table2_latency import run as r
+        elif name == "fig6":
+            from .fig6_memory import run as r
+        elif name == "fig9":
+            from .fig9_tradeoff import run as r
+        else:
+            print(f"unknown benchmark {name}", file=sys.stderr)
+            continue
+        for row in r():
+            print(",".join(str(x) for x in row), flush=True)
+
+
+if __name__ == "__main__":
+    main()

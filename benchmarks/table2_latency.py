@@ -1,0 +1,89 @@
+"""Table 2 analog: latency/energy across the paper's five edge datasets,
+single-datapoint vs batched (the paper's B/S/M vs ESP32 comparison).
+
+Measured columns: jitted compressed-interpreter wall time on this CPU (the
+"software MCU" analog) for batch=1 and batch=32, and the decoded-plan
+parallel executor (beyond-paper path).  Modeled columns: eFPGA cycles ->
+latency/energy from the paper's 4-cycle/200MHz/0.35W constants.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.compress import decode_to_plan
+from repro.core.interp import pack_features, interpret_stream, pad_plan, plan_class_sums
+from .tm_bench_common import (
+    modeled_efpga_energy_j,
+    modeled_efpga_latency_s,
+    time_call,
+    trained_tm,
+)
+
+import jax
+import jax.numpy as jnp
+
+DATASETS = ("emg", "har", "gesture", "sensorless", "gas")
+
+
+def run():
+    rows = []
+    for name in DATASETS:
+        tm = trained_tm(name)
+        cfg, model = tm.cfg, tm.model
+        I = model.n_instructions
+        i_cap = max(1024, 1 << int(np.ceil(np.log2(I + 1))))
+        f_cap = 1 << int(np.ceil(np.log2(cfg.n_features + 1)))
+        imem = np.zeros(i_cap, np.uint16)
+        imem[:I] = model.instructions
+        imem_j = jnp.asarray(imem)
+
+        x1 = tm.x_test[:32]  # one word = up to 32 datapoints
+
+        def run_interp(x):
+            packed = pack_features(jnp.asarray(x), f_cap, 1)
+            return interpret_stream(imem_j, jnp.int32(I), packed,
+                                    jnp.int32(x.shape[0]), m_cap=16)
+
+        t_single = time_call(run_interp, tm.x_test[:1], repeats=10)
+        t_batch = time_call(run_interp, x1, repeats=10)
+
+        # decoded-plan parallel executor (beyond-paper)
+        plan = decode_to_plan(model)
+        ncl_cap = cfg.n_classes * cfg.n_clauses
+        li, ci, cc, cp = (jnp.asarray(a) for a in pad_plan(plan, i_cap, ncl_cap))
+        lits32 = np.stack(
+            [tm.x_test[:32], 1 - tm.x_test[:32]], axis=-1
+        ).reshape(32, -1).astype(np.int8)
+
+        def run_plan(lits):
+            return plan_class_sums(li, ci, cc, cp, jnp.asarray(lits),
+                                   n_clause_cap=ncl_cap, m_cap=16)
+
+        t_plan = time_call(run_plan, lits32, repeats=10)
+
+        lat_model = modeled_efpga_latency_s(I)
+        e_model = modeled_efpga_energy_j(I)
+        rows.append((
+            f"table2/{name}_acc", 0.0, round(tm.accuracy, 3),
+        ))
+        rows.append((
+            f"table2/{name}_instructions", 0.0, I,
+        ))
+        rows.append((
+            f"table2/{name}_interp_single_us", round(t_single * 1e6, 1),
+            f"batched32_us={t_batch * 1e6:.1f}",
+        ))
+        rows.append((
+            f"table2/{name}_interp_per_dp_us", round(t_batch / 32 * 1e6, 2),
+            f"batch_speedup={t_single * 32 / t_batch:.1f}x",
+        ))
+        rows.append((
+            f"table2/{name}_plan_batched32_us", round(t_plan * 1e6, 1),
+            f"plan_vs_interp={t_batch / t_plan:.1f}x",
+        ))
+        rows.append((
+            f"table2/{name}_efpga_model_batch32_us", round(lat_model * 1e6, 2),
+            f"energy_uJ={e_model * 1e6:.2f}",
+        ))
+    return rows

@@ -1,0 +1,46 @@
+"""End-to-end distributed-substrate driver: train a ~100M-class LM for a few
+hundred steps on the synthetic pipeline with checkpoint/restart.
+
+This exercises the same launcher the production mesh uses (configs ->
+sharding rules -> jitted train step -> checkpoint manager), on the CPU
+devices available in this container.
+
+Run:  PYTHONPATH=src python examples/lm_train.py [--steps 200]
+"""
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="xlstm-125m")
+    args = ap.parse_args()
+
+    # xlstm-125m IS ~125M params at full config; on CPU we train it with a
+    # short sequence so a few hundred steps complete in minutes.
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch,
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "128",
+        "--mesh", "1x1",
+        "--ckpt", "/tmp/repro_lm_train",
+        "--save-every", "50",
+        "--log-every", "10",
+    ]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    raise SystemExit(subprocess.call(cmd, env=env, cwd=REPO))
+
+
+if __name__ == "__main__":
+    main()

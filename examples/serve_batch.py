@@ -1,0 +1,47 @@
+"""Batched LM serving with runtime weight swap (no re-jit) — the paper's
+tunability discipline applied to the LM serving substrate.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get
+from repro.launch.serve import Server
+from repro.models.api import family_for
+
+
+def main():
+    cfg = get("stablelm-3b-smoke")
+    fam = family_for(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    server = Server(cfg, mesh, batch=4, prompt_cap=32)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (4, 32)).astype(np.int32)
+
+    # model A
+    server.load_weights(fam.init_params(cfg, jax.random.key(0)))
+    t0 = time.time()
+    out_a = server.generate(prompts, 16)
+    t_a = time.time() - t0
+
+    # runtime weight swap: same compiled program, new model (e.g. the
+    # recalibrated checkpoint from the training node)
+    server.load_weights(fam.init_params(cfg, jax.random.key(42)))
+    t0 = time.time()
+    out_b = server.generate(prompts, 16)
+    t_b = time.time() - t0
+
+    swapped = not np.array_equal(out_a, out_b)
+    print(f"model A: {out_a.shape} in {t_a:.2f}s; model B in {t_b:.2f}s "
+          f"(includes no recompile; outputs differ: {swapped})")
+    print("first tokens A:", out_a[0, :8])
+    print("first tokens B:", out_b[0, :8])
+
+
+if __name__ == "__main__":
+    main()

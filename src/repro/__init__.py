@@ -1,0 +1,3 @@
+"""repro: Runtime Tunable Tsetlin Machines (tinyML'25) as a multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,114 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+Adds the fused-memory lower bound: XLA-CPU ``bytes accessed`` counts every
+operand/result of every op (an UNFUSED upper bound on HBM traffic — the CPU
+backend does not fuse like the TPU backend).  The fused lower bound models
+perfect producer-consumer fusion: every live buffer moves once each way,
+
+    bytes_lower ~= argument + output + 2 * temp   (memory_analysis sizes)
+
+The true TPU number lies between; we classify the bottleneck with the lower
+bound (closer to a fused TPU program) and report both.
+
+    PYTHONPATH=src python -m repro.analysis.report > experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+HERE = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__)))))
+DRYRUN_DIR = os.path.join(HERE, "experiments", "dryrun")
+
+SKIPPED_LONG = [
+    ("starcoder2-7b", "full attention is O(S^2); no published sub-quadratic variant"),
+    ("stablelm-12b", "full attention"),
+    ("deepseek-7b", "full attention"),
+    ("stablelm-3b", "full attention"),
+    ("llama4-maverick-400b-a17b", "full attention"),
+    ("moonshot-v1-16b-a3b", "full attention"),
+    ("whisper-medium", "full-attention decoder"),
+    ("internvl2-26b", "full attention"),
+]
+
+
+def enrich(d: Dict) -> Dict:
+    ma = d.get("memory_analysis", {})
+    lower = (
+        ma.get("argument_size_in_bytes", 0)
+        + ma.get("output_size_in_bytes", 0)
+        + 2 * ma.get("temp_size_in_bytes", 0)
+    )
+    d["t_memory_lower"] = lower / HBM_BW
+    d["t_memory_upper"] = d["t_memory"]
+    terms = {
+        "compute": d["t_compute"],
+        "memory": d["t_memory_lower"],
+        "collective": d["t_collective"],
+    }
+    d["bottleneck_fused"] = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    mf = d.get("model_flops_global", 0)
+    d["peak_fraction_fused"] = (
+        mf / (d["chips"] * PEAK_FLOPS * t_bound) if t_bound > 0 and mf > 0 else 0.0
+    )
+    return d
+
+
+def load(mesh: str) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        d = json.load(open(f))
+        if "t_compute" not in d:
+            continue
+        out.append(enrich(d))
+    return out
+
+
+def ms(x: float) -> str:
+    return f"{x * 1e3:.1f}"
+
+
+def table(mesh: str) -> str:
+    rows = load(mesh)
+    hdr = (
+        "| arch | shape | t_comp ms | t_mem ms [fused..unfused] | t_coll ms "
+        "| bottleneck | MODEL/HLO flops | peak frac | HBM/dev GB |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for d in rows:
+        ma = d.get("memory_analysis", {})
+        hbm = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0)) / 1e9
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {ms(d['t_compute'])} "
+            f"| {ms(d['t_memory_lower'])}..{ms(d['t_memory_upper'])} "
+            f"| {ms(d['t_collective'])} | {d['bottleneck_fused']} "
+            f"| {d.get('useful_flops_ratio', 0):.2f} "
+            f"| {100 * d.get('peak_fraction_fused', 0):.1f}% | {hbm:.1f} |"
+        )
+    skip = "\n".join(
+        f"| {a} | long_500k | — | — | — | SKIP ({why}) | — | — | — |"
+        for a, why in SKIPPED_LONG
+    )
+    return hdr + "\n".join(lines) + "\n" + skip + "\n"
+
+
+def main():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        print(f"\n### Mesh {mesh} ({rows[0]['chips']} chips)\n")
+        print(table(mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""The paper's primary contribution: runtime-tunable compressed TM inference.
+
+Layers (bottom-up):
+  tm.py          dense Tsetlin Machine model + bitpacked batch inference
+  booleanize.py  raw features -> Boolean features
+  train.py       Type I/II feedback training (the Fig-8 "training node")
+  compress.py    Include-only 16-bit instruction encoding (Fig 3.4)
+  interp.py      compressed inference: faithful scan interpreter +
+                 decoded-plan parallel executor (beyond-paper)
+  runtime.py     stream protocol (headers, Fig 4.1-4.3) + fixed-capacity
+                 Accelerator with zero-recompile model swap + class-sharded
+                 multi-core execution
+"""
+
+from .tm import (
+    TMConfig,
+    init_state,
+    include_actions,
+    literals,
+    clause_outputs,
+    clause_polarities,
+    class_sums,
+    predict,
+    batch_class_sums,
+    pack_literals,
+    unpack_bits,
+    packed_class_sums,
+    dense_model_bytes,
+)
+from .train import train_batch, train_batch_parallel, fit, accuracy
+from .booleanize import Booleanizer, booleanize_images
+
+__all__ = [
+    "TMConfig",
+    "init_state",
+    "include_actions",
+    "literals",
+    "clause_outputs",
+    "clause_polarities",
+    "class_sums",
+    "predict",
+    "batch_class_sums",
+    "pack_literals",
+    "unpack_bits",
+    "packed_class_sums",
+    "dense_model_bytes",
+    "train_batch",
+    "train_batch_parallel",
+    "fit",
+    "accuracy",
+    "Booleanizer",
+    "booleanize_images",
+]

@@ -1,0 +1,236 @@
+"""Include-only instruction compression (paper §2, Fig 3.4).
+
+A trained TM is ~99% Excludes; only Include TAs matter for inference.  The
+model is compressed to a stream of 16-bit *Include Instructions*:
+
+      bit 15 : E   — toggles when the class changes
+      bit 14 : CC  — toggles when the clause changes
+      bit 13 : P   — polarity of the clause this include belongs to (1 = +)
+      bit 12 : L   — literal is the complement (f̄) iff 1
+      bits 11..0 : O — offset (literal slots to advance), 0..4094
+
+Traversal order (Fig 3.3): class-major, then clause, then interleaved literal
+slot k (= 2*feature + is_complement), so offsets within a clause are strictly
+positive after the first include.  The offset counts *within-clause* slots;
+the literal pointer resets to 0 at each clause boundary (the Literal Select
+step of Fig 4.5 indexes Feature Memory with the accumulated pointer).
+
+Escape: O == 0xFFF is EXTEND — advance the literal pointer by 4095 slots
+without consuming a literal.  An EXTEND may also carry the CC/E boundary
+toggles; a clause whose stream consists only of EXTENDs has no content and
+contributes nothing (inference semantics: empty clause -> 0).  Encoding a
+class with zero includes therefore emits a single boundary EXTEND so the
+E-toggle class counter stays aligned (the paper's E bit, generalized).
+
+Interpreter contract (shared by interp.py, runtime.py and the Pallas kernel):
+  * boundary  := (CC != prev_CC) or (E != prev_E)
+  * on boundary: finalize previous clause (add pol * acc to class sums iff
+    any include executed in it), advance class iff E toggled, reset the
+    literal pointer and the clause accumulator
+  * EXTEND: ptr += 4095, no other effect
+  * include: ptr += O; literal = (L ? NOT feature[ptr>>1] : feature[ptr>>1]);
+    acc &= literal   (ptr's LSB must equal L — interleaved order)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .tm import TMConfig
+
+E_BIT = 15
+CC_BIT = 14
+P_BIT = 13
+L_BIT = 12
+OFF_MASK = 0x0FFF
+EXTEND = 0x0FFF  # offset escape: advance 4095 slots, consume nothing
+MAX_OFF = OFF_MASK - 1  # 4094
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedModel:
+    """The programmable artifact: what the Fig-8 training node ships."""
+
+    instructions: np.ndarray  # uint16[I]
+    n_classes: int
+    n_clauses: int  # clauses per class (accumulator bound, Fig 4.6)
+    n_features: int  # Boolean features (feature-memory depth)
+
+    @property
+    def n_instructions(self) -> int:
+        return int(self.instructions.shape[0])
+
+    @property
+    def n_bytes(self) -> int:
+        return self.n_instructions * 2
+
+    def compression_ratio(self, cfg: TMConfig) -> float:
+        """Fraction of the dense 1-bit-per-TA model eliminated (paper: ~99%)."""
+        dense_bits = cfg.n_tas
+        return 1.0 - (self.n_instructions * 16) / dense_bits
+
+
+def _emit(e: int, cc: int, p: int, l: int, off: int) -> int:
+    return (e << E_BIT) | (cc << CC_BIT) | (p << P_BIT) | (l << L_BIT) | off
+
+
+def encode(cfg: TMConfig, actions: np.ndarray) -> CompressedModel:
+    """Dense include actions bool[M, C, 2F] -> compressed instruction stream."""
+    actions = np.asarray(actions, dtype=bool)
+    M, C, L2 = actions.shape
+    assert (M, C, L2) == (cfg.n_classes, cfg.n_clauses, cfg.n_literals)
+
+    out: List[int] = []
+    e_tog, cc_tog = 0, 0  # current toggle levels
+    for m in range(M):
+        new_class = True
+        if not actions[m].any():
+            # class with zero includes: lone boundary EXTEND advances E
+            e_tog ^= 1
+            cc_tog ^= 1
+            out.append(_emit(e_tog, cc_tog, 0, 0, EXTEND))
+            continue
+        for j in range(C):
+            ks = np.flatnonzero(actions[m, j])
+            if ks.size == 0:
+                continue  # empty clause: contributes 0 at inference; skip
+            pol = 1 if j % 2 == 0 else 0
+            cc_tog ^= 1
+            if new_class:
+                e_tog ^= 1
+                new_class = False
+            ptr = 0
+            first = True
+            for k in ks.tolist():
+                delta = int(k) - ptr
+                while delta > MAX_OFF:
+                    out.append(_emit(e_tog, cc_tog, pol, 0, EXTEND))
+                    delta -= EXTEND
+                    first = False
+                out.append(_emit(e_tog, cc_tog, pol, int(k) & 1, delta))
+                ptr = int(k)
+                first = False
+    return CompressedModel(
+        instructions=np.asarray(out, dtype=np.uint16),
+        n_classes=M,
+        n_clauses=C,
+        n_features=cfg.n_features,
+    )
+
+
+def decode(model: CompressedModel) -> np.ndarray:
+    """Instruction stream -> dense include actions bool[M, C, 2F].
+
+    Clause ordinals are re-assigned densely per class (empty clauses were
+    skipped at encode time): + clauses to even slots, - clauses to odd slots,
+    restoring polarity semantics exactly (verified by property tests).
+    """
+    M, C, F = model.n_classes, model.n_clauses, model.n_features
+    acts = np.zeros((M, C, 2 * F), dtype=bool)
+    next_even = np.zeros(M, dtype=np.int64)
+    next_odd = np.ones(M, dtype=np.int64)
+
+    cls = -1
+    slot = -1
+    content = False
+    ptr = 0
+    prev_e, prev_cc = 0, 0
+    for ins in model.instructions.tolist():
+        e = (ins >> E_BIT) & 1
+        cc = (ins >> CC_BIT) & 1
+        p = (ins >> P_BIT) & 1
+        off = ins & OFF_MASK
+        if cc != prev_cc or e != prev_e:  # boundary
+            if e != prev_e:
+                cls += 1
+            prev_e, prev_cc = e, cc
+            ptr = 0
+            content = False
+            slot = -1
+        if off == EXTEND:
+            ptr += EXTEND
+            continue
+        if not content:
+            if p == 1:
+                slot = int(next_even[cls])
+                next_even[cls] += 2
+            else:
+                slot = int(next_odd[cls])
+                next_odd[cls] += 2
+            content = True
+        ptr = ptr + off
+        acts[cls, slot, ptr] = True
+    return acts
+
+
+# ---------------------------------------------------------------------------
+# Decoded execution plan (beyond-paper optimized path; see interp.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodedPlan:
+    """Offset chains prefix-summed into absolute indices (done ONCE at
+    program time).  Inference then becomes gather + segmented reduction —
+    fully parallel, unlike the paper's 4-cycle/instruction pipeline."""
+
+    lit_idx: np.ndarray  # int32[I']  absolute literal slot in [0, 2F)
+    clause_id: np.ndarray  # int32[I'] global clause id (dense numbering)
+    clause_class: np.ndarray  # int32[Ncl] class of each global clause
+    clause_pol: np.ndarray  # int32[Ncl] +1 / -1
+    n_classes: int
+    n_features: int
+
+    @property
+    def n_includes(self) -> int:
+        return int(self.lit_idx.shape[0])
+
+    @property
+    def n_clauses_total(self) -> int:
+        return int(self.clause_pol.shape[0])
+
+
+def decode_to_plan(model: CompressedModel) -> DecodedPlan:
+    """Walk the stream once on the host, materializing absolute indices."""
+    lit_idx: List[int] = []
+    clause_id: List[int] = []
+    clause_class: List[int] = []
+    clause_pol: List[int] = []
+
+    cls = -1
+    cur_clause = -1
+    content = False
+    ptr = 0
+    prev_e, prev_cc = 0, 0
+    for ins in model.instructions.tolist():
+        e = (ins >> E_BIT) & 1
+        cc = (ins >> CC_BIT) & 1
+        p = (ins >> P_BIT) & 1
+        off = ins & OFF_MASK
+        if cc != prev_cc or e != prev_e:  # boundary
+            if e != prev_e:
+                cls += 1
+            prev_e, prev_cc = e, cc
+            ptr = 0
+            content = False
+        if off == EXTEND:
+            ptr += EXTEND
+            continue
+        if not content:
+            cur_clause += 1
+            clause_class.append(cls)
+            clause_pol.append(1 if p == 1 else -1)
+            content = True
+        ptr = ptr + off
+        lit_idx.append(ptr)
+        clause_id.append(cur_clause)
+    return DecodedPlan(
+        lit_idx=np.asarray(lit_idx, dtype=np.int32),
+        clause_id=np.asarray(clause_id, dtype=np.int32),
+        clause_class=np.asarray(clause_class, dtype=np.int32),
+        clause_pol=np.asarray(clause_pol, dtype=np.int32),
+        n_classes=model.n_classes,
+        n_features=model.n_features,
+    )

@@ -1,0 +1,196 @@
+"""Compressed-domain TM inference engines.
+
+Two execution strategies over the SAME instruction stream (compress.py):
+
+1. ``interpret_stream`` — the paper-faithful interpreter.  A ``lax.scan``
+   walks the stream exactly like the eFPGA's fetch/decode/select/accumulate
+   pipeline (Fig 4.4-4.6, Fig 5): one instruction per step, a literal
+   pointer register, a clause-output accumulator of ``W`` bit-packed words
+   (32 datapoints per word, the paper's batching), class-sum accumulators,
+   and toggle-bit boundary detection.  Buffers are FIXED CAPACITY with
+   dynamic counts, so the jitted program never recompiles when the model,
+   task, or input dimensionality changes — the JAX analog of "no offline
+   resynthesis".
+
+2. ``plan_class_sums`` — the beyond-paper *decoded-plan* executor.  The
+   offset chains are prefix-summed once at program time (compress.decode_to_plan);
+   inference is then a literal gather + segmented AND (min) + segmented
+   polarity sum, which is embarrassingly parallel across instructions AND
+   datapoints — the TPU-native reformulation of the sequential pipeline.
+
+Both match dense inference (tm.batch_class_sums) bit-exactly; property tests
+enforce it.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .compress import CC_BIT, E_BIT, EXTEND, L_BIT, OFF_MASK, P_BIT
+from .tm import unpack_bits
+
+Array = jax.Array
+
+
+def pack_features(x: Array, n_feature_cap: int, n_word_cap: int) -> Array:
+    """{0,1}[B, F] -> uint32[F_cap, W_cap] feature memory (bit b of word w =
+    datapoint w*32+b).  B must be <= 32*W_cap; F <= F_cap."""
+    x = x.astype(jnp.uint32)
+    B, F = x.shape
+    W = (B + 31) // 32
+    pad_b = W * 32 - B
+    xp = jnp.pad(x, ((0, pad_b), (0, n_feature_cap - F)))  # [W*32, F_cap]
+    xp = xp.T.reshape(n_feature_cap, W, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    words = jnp.sum(xp << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+    return jnp.pad(words, ((0, 0), (0, n_word_cap - W)))
+
+
+# ---------------------------------------------------------------------------
+# 1. Paper-faithful stream interpreter
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("m_cap",))
+def interpret_stream(
+    instructions: Array,  # uint16[I_cap]  instruction memory
+    n_instructions: Array,  # int32 scalar   (Instruction Header field)
+    packed_features: Array,  # uint32[F_cap, W] feature memory
+    n_datapoints: Array,  # int32 scalar   (Feature Header field)
+    *,
+    m_cap: int,  # class-sum accumulator depth ("synthesis-time" choice)
+) -> Array:
+    """Execute the compressed model -> int32[m_cap, W*32] class sums.
+
+    Rows >= the stream's class count stay 0; datapoint columns >=
+    n_datapoints are garbage (caller slices).  Mirrors the hardware: the
+    accumulator bank is physically m_cap deep regardless of the model.
+    """
+    i_cap = instructions.shape[0]
+    f_cap, w = packed_features.shape
+    B = w * 32
+    ones = jnp.uint32(0xFFFFFFFF)
+
+    def finalize(sums, cls, pol, acc, nonempty):
+        contrib = jnp.where(nonempty, pol, 0) * unpack_bits(acc)  # [B]
+        return sums.at[cls].add(contrib)
+
+    def step(carry, i):
+        (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, sums) = carry
+        ins = instructions[i].astype(jnp.uint32)
+        active = i < n_instructions
+
+        e = (ins >> E_BIT) & 1
+        cc = (ins >> CC_BIT) & 1
+        p = (ins >> P_BIT) & 1
+        l = (ins >> L_BIT) & 1
+        off = (ins & OFF_MASK).astype(jnp.int32)
+
+        boundary = active & ((e != prev_e) | (cc != prev_cc))
+        # finalize previous clause on boundary
+        sums = jnp.where(boundary, finalize(sums, cls, pol, acc, nonempty), sums)
+        cls = jnp.where(boundary & (e != prev_e), cls + 1, cls)
+        ptr = jnp.where(boundary, 0, ptr)
+        acc = jnp.where(boundary, ones, acc)
+        nonempty = jnp.where(boundary, False, nonempty)
+        pol = jnp.where(boundary, jnp.where(p == 1, 1, -1).astype(jnp.int32), pol)
+        prev_e = jnp.where(active, e, prev_e)
+        prev_cc = jnp.where(active, cc, prev_cc)
+
+        is_ext = off == EXTEND
+        do_inc = active & ~is_ext
+        ptr = ptr + jnp.where(active, jnp.where(is_ext, EXTEND, off), 0)
+        feat = jnp.clip(ptr >> 1, 0, f_cap - 1)
+        word = packed_features[feat]  # [W] uint32 — Literal Select (Fig 4.5)
+        lit = jnp.where(l == 1, ~word, word)
+        acc = jnp.where(do_inc, acc & lit, acc)
+        nonempty = nonempty | do_inc
+        return (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, sums), None
+
+    sums0 = jnp.zeros((m_cap, B), dtype=jnp.int32)
+    carry0 = (
+        jnp.int32(0),  # ptr
+        jnp.int32(-1),  # cls (first boundary brings it to 0)
+        jnp.int32(1),  # pol
+        jnp.full((w,), ones, dtype=jnp.uint32),  # acc
+        jnp.bool_(False),  # nonempty
+        jnp.uint32(0),  # prev_e
+        jnp.uint32(0),  # prev_cc
+        sums0,
+    )
+    carry, _ = jax.lax.scan(step, carry0, jnp.arange(i_cap, dtype=jnp.int32))
+    ptr, cls, pol, acc, nonempty, _, _, sums = carry
+    # end-of-stream: finalize the last clause
+    cls = jnp.clip(cls, 0, m_cap - 1)
+    sums = finalize(sums, cls, pol, acc, nonempty)
+    del n_datapoints  # columns beyond the count are sliced by the caller
+    return sums
+
+
+def interpret_predict(
+    instructions: Array,
+    n_instructions: Array,
+    packed_features: Array,
+    n_datapoints: Array,
+    n_classes: Array,
+    *,
+    m_cap: int,
+) -> Array:
+    """argmax over valid class rows -> int32[B] predictions."""
+    sums = interpret_stream(
+        instructions, n_instructions, packed_features, n_datapoints, m_cap=m_cap
+    )
+    valid = jnp.arange(m_cap) < n_classes
+    masked = jnp.where(valid[:, None], sums, jnp.iinfo(jnp.int32).min)
+    return jnp.argmax(masked, axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 2. Decoded-plan executor (beyond-paper, parallel)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_clause_cap", "m_cap"))
+def plan_class_sums(
+    lit_idx: Array,  # int32[I_cap] absolute literal slot (padded)
+    clause_id: Array,  # int32[I_cap] global clause id; padded slots -> n_clause_cap
+    clause_class: Array,  # int32[Ncl_cap] (padded -> m_cap sink row handled below)
+    clause_pol: Array,  # int32[Ncl_cap] +1/-1 (padded -> 0)
+    lits: Array,  # bool[B, 2F] literal matrix
+    *,
+    n_clause_cap: int,
+    m_cap: int,
+) -> Array:
+    """Gather + segmented reduction form -> int32[B, m_cap] class sums."""
+    sel = jnp.take(lits, lit_idx, axis=1).astype(jnp.int32)  # [B, I]
+    # segmented AND == segmented min over {0,1}; padded instructions land in
+    # an extra sink segment (id == n_clause_cap) and are dropped.
+    clause_out = jax.ops.segment_min(
+        sel.T, clause_id, num_segments=n_clause_cap + 1, indices_are_sorted=True
+    )[:n_clause_cap]  # [Ncl_cap, B]; empty segments -> int32 max
+    has_content = jax.ops.segment_sum(
+        jnp.ones_like(clause_id), clause_id, num_segments=n_clause_cap + 1,
+        indices_are_sorted=True,
+    )[:n_clause_cap] > 0
+    clause_out = jnp.where(has_content[:, None], clause_out, 0)
+    contrib = clause_out * clause_pol[:, None]  # [Ncl_cap, B]
+    sums = jax.ops.segment_sum(
+        contrib, jnp.clip(clause_class, 0, m_cap - 1), num_segments=m_cap,
+    )  # [m_cap, B]
+    return sums.T
+
+
+def pad_plan(plan, i_cap: int, n_clause_cap: int):
+    """Host-side: pad a DecodedPlan to fixed capacities for the jitted path."""
+    import numpy as np
+
+    li = np.zeros(i_cap, dtype=np.int32)
+    ci = np.full(i_cap, n_clause_cap, dtype=np.int32)  # sink segment
+    li[: plan.n_includes] = plan.lit_idx
+    ci[: plan.n_includes] = plan.clause_id
+    cc = np.zeros(n_clause_cap, dtype=np.int32)
+    cp = np.zeros(n_clause_cap, dtype=np.int32)
+    cc[: plan.n_clauses_total] = plan.clause_class
+    cp[: plan.n_clauses_total] = plan.clause_pol
+    return li, ci, cc, cp

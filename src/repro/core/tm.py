@@ -1,0 +1,170 @@
+"""Dense (vanilla) Tsetlin Machine model in JAX.
+
+The TM model for M classes, C clauses/class, F Boolean features:
+  * TA state tensor  S  : int32[M, C, 2F]   in [1, 2N]   (N = ``n_states``)
+  * include action   A  : bool [M, C, 2F]   A = S > N
+  * literal order is **interleaved**: slot k corresponds to feature k>>1,
+    complemented iff k&1 == 1.  This keeps within-clause include offsets
+    strictly positive for the compressed encoding (see compress.py).
+
+Clause semantics:
+  train:     empty clause (no includes) outputs 1
+  inference: empty clause outputs 0
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    n_classes: int
+    n_clauses: int          # clauses per class; polarity alternates +,-,+,-,...
+    n_features: int         # Boolean features (literals = 2 * n_features)
+    n_states: int = 128     # per-action state count N; S in [1, 2N]
+    threshold: int = 15     # T
+    specificity: float = 3.9  # s
+    boost_true_positive: bool = True
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+    @property
+    def n_tas(self) -> int:
+        return self.n_classes * self.n_clauses * self.n_literals
+
+
+def init_state(cfg: TMConfig, key: Array) -> Array:
+    """TA states start on the Exclude side of the decision boundary (= N)."""
+    del key  # deterministic init; kept for interface symmetry
+    return jnp.full(
+        (cfg.n_classes, cfg.n_clauses, cfg.n_literals), cfg.n_states, dtype=jnp.int32
+    )
+
+
+def include_actions(cfg: TMConfig, state: Array) -> Array:
+    """bool[M, C, 2F] — True where the TA action is Include."""
+    return state > cfg.n_states
+
+
+def literals(x: Array) -> Array:
+    """Boolean features -> interleaved literals.
+
+    x: bool/int {0,1}[..., F]  ->  {0,1}[..., 2F] with slot 2k = x_k,
+    slot 2k+1 = NOT x_k.
+    """
+    x = x.astype(jnp.bool_)
+    inter = jnp.stack([x, ~x], axis=-1)  # [..., F, 2]
+    return inter.reshape(*x.shape[:-1], x.shape[-1] * 2)
+
+
+def clause_outputs(
+    cfg: TMConfig, actions: Array, lits: Array, *, training: bool
+) -> Array:
+    """Clause outputs for one datapoint.
+
+    actions: bool[M, C, 2F]; lits: bool[2F]  ->  bool[M, C]
+    """
+    # A clause fires iff every included literal is 1.
+    sat = jnp.all(jnp.where(actions, lits, True), axis=-1)  # [M, C]
+    nonempty = jnp.any(actions, axis=-1)  # [M, C]
+    if training:
+        return sat
+    return sat & nonempty
+
+
+def clause_polarities(cfg: TMConfig) -> Array:
+    """int32[C]: +1 for even clause index, -1 for odd."""
+    idx = jnp.arange(cfg.n_clauses)
+    return jnp.where(idx % 2 == 0, 1, -1).astype(jnp.int32)
+
+
+def class_sums(cfg: TMConfig, actions: Array, lits: Array, *, training: bool) -> Array:
+    """int32[M] class sums for one datapoint."""
+    c = clause_outputs(cfg, actions, lits, training=training).astype(jnp.int32)
+    pol = clause_polarities(cfg)
+    return jnp.sum(c * pol[None, :], axis=-1)
+
+
+@partial(jax.jit, static_argnums=0)
+def predict(cfg: TMConfig, state: Array, x: Array) -> Array:
+    """Batched dense prediction. x: {0,1}[B, F] -> int32[B] class ids."""
+    actions = include_actions(cfg, state)
+    lits = literals(x)  # [B, 2F]
+    sums = jax.vmap(
+        lambda l: class_sums(cfg, actions, l, training=False)
+    )(lits)  # [B, M]
+    return jnp.argmax(sums, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=0)
+def batch_class_sums(cfg: TMConfig, state: Array, x: Array) -> Array:
+    """int32[B, M] inference-semantics class sums (oracle for all fast paths)."""
+    actions = include_actions(cfg, state)
+    lits = literals(x)
+    return jax.vmap(lambda l: class_sums(cfg, actions, l, training=False))(lits)
+
+
+# ---------------------------------------------------------------------------
+# Bitpacked inference (paper §3: 32 datapoints per machine word)
+# ---------------------------------------------------------------------------
+
+def pack_literals(x: Array) -> Array:
+    """Pack the batch dim of literals into uint32 words.
+
+    x: {0,1}[B, F] with B % 32 == 0  ->  uint32[2F, B//32]
+    word bit b holds datapoint (w*32 + b).
+    """
+    lits = literals(x).astype(jnp.uint32)  # [B, 2F]
+    B = lits.shape[0]
+    assert B % 32 == 0, "batch must be a multiple of 32 for bit packing"
+    lits = lits.T.reshape(lits.shape[1], B // 32, 32)  # [2F, W, 32]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lits << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: Array) -> Array:
+    """uint32[..., W] -> int32[..., W*32] of {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * 32).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=0)
+def packed_class_sums(cfg: TMConfig, state: Array, packed_lits: Array) -> Array:
+    """Bitpacked dense inference.
+
+    packed_lits: uint32[2F, W]  ->  int32[W*32, M] class sums
+    (matches ``batch_class_sums`` exactly for the packing in pack_literals).
+    """
+    actions = include_actions(cfg, state)  # [M, C, 2F]
+    ones = jnp.uint32(0xFFFFFFFF)
+
+    # acc[m, c, w] = AND over included k of packed_lits[k, w]
+    def clause_word(a_row):  # a_row: bool[2F]
+        masked = jnp.where(a_row[:, None], packed_lits, ones)  # [2F, W]
+        # AND-reduce over literals via bitwise_and reduction
+        return jax.lax.reduce(
+            masked, ones, jnp.bitwise_and, dimensions=(0,)
+        )  # [W]
+
+    acc = jax.vmap(jax.vmap(clause_word))(actions)  # [M, C, W]
+    nonempty = jnp.any(actions, axis=-1)  # [M, C]
+    acc = jnp.where(nonempty[..., None], acc, jnp.uint32(0))
+    bits = unpack_bits(acc)  # [M, C, B]
+    pol = clause_polarities(cfg)
+    sums = jnp.sum(bits * pol[None, :, None], axis=1)  # [M, B]
+    return sums.T  # [B, M]
+
+
+def dense_model_bytes(cfg: TMConfig) -> int:
+    """Uncompressed model footprint: 1 bit per TA action."""
+    return (cfg.n_tas + 7) // 8

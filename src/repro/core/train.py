@@ -1,0 +1,188 @@
+"""Vanilla Tsetlin Machine training (Granmo 2018, refs [8,9,21] in the paper).
+
+Faithful *online* semantics: samples update TA state sequentially
+(``lax.scan`` over the batch).  For each sample:
+
+  * target class y       -> clauses selected w.p. (T - clamp(v))/2T
+       positive clauses get Type I feedback, negative get Type II
+  * one random class != y -> clauses selected w.p. (T + clamp(v))/2T
+       positive clauses get Type II feedback, negative get Type I
+
+Type I  (combats false negatives / reinforces patterns):
+   clause==1: literal==1 -> +1 w.p. (s-1)/s (1.0 if boost_true_positive)
+              literal==0 -> -1 w.p. 1/s
+   clause==0: all TAs    -> -1 w.p. 1/s
+Type II (combats false positives):
+   clause==1 & literal==0 & action==Exclude -> +1 (deterministic)
+
+This trainer is the "Model Training Node" of the paper's Fig 8 system: it is
+cheap (bitwise + increments), runs on host/CPU-class hardware, and its output
+is compressed into the instruction stream that reprograms the accelerator.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .tm import TMConfig, clause_polarities, literals
+
+Array = jax.Array
+
+
+def _type_i_delta(cfg: TMConfig, key: Array, clause_out: Array, lits: Array) -> Array:
+    """Type I state delta for ALL clauses of one class.
+
+    clause_out: bool[C]; lits: bool[2F] -> int32[C, 2F]
+    """
+    C, L = cfg.n_clauses, cfg.n_literals
+    s = cfg.specificity
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, (C, L))
+    # clause fired:
+    p_strengthen = 1.0 if cfg.boost_true_positive else (s - 1.0) / s
+    inc = jnp.where(lits[None, :], (u < p_strengthen).astype(jnp.int32), 0)
+    dec_lit0 = jnp.where(~lits[None, :], -(u < 1.0 / s).astype(jnp.int32), 0)
+    fired = inc + dec_lit0
+    # clause did not fire: gentle push towards Exclude
+    u2 = jax.random.uniform(k2, (C, L))
+    unfired = -(u2 < 1.0 / s).astype(jnp.int32)
+    return jnp.where(clause_out[:, None], fired, unfired)
+
+
+def _type_ii_delta(
+    cfg: TMConfig, clause_out: Array, lits: Array, actions: Array
+) -> Array:
+    """Type II delta: push Excluded TAs of 0-literals towards Include when the
+    clause (wrongly) fires. int32[C, 2F]."""
+    push = clause_out[:, None] & (~lits[None, :]) & (~actions)
+    return push.astype(jnp.int32)
+
+
+def _class_feedback(
+    cfg: TMConfig,
+    key: Array,
+    class_state: Array,  # int32[C, 2F]
+    lits: Array,  # bool[2F]
+    is_target: Array,  # bool scalar
+) -> Array:
+    """New state for one class given one sample."""
+    N = cfg.n_states
+    T = cfg.threshold
+    actions = class_state > N
+    sat = jnp.all(jnp.where(actions, lits[None, :], True), axis=-1)  # train: empty->1
+    pol = clause_polarities(cfg)  # +1/-1
+    v = jnp.clip(jnp.sum(sat.astype(jnp.int32) * pol), -T, T)
+
+    p_sel = jnp.where(is_target, (T - v) / (2.0 * T), (T + v) / (2.0 * T))
+    k_sel, k_t1 = jax.random.split(key)
+    selected = jax.random.uniform(k_sel, (cfg.n_clauses,)) < p_sel
+
+    pos = pol > 0
+    t1_mask = selected & jnp.where(is_target, pos, ~pos)
+    t2_mask = selected & jnp.where(is_target, ~pos, pos)
+
+    d1 = _type_i_delta(cfg, k_t1, sat, lits)
+    d2 = _type_ii_delta(cfg, sat, lits, actions)
+    delta = t1_mask[:, None] * d1 + t2_mask[:, None] * d2
+    return jnp.clip(class_state + delta, 1, 2 * N)
+
+
+def _sample_update(cfg: TMConfig, state: Array, key: Array, x: Array, y: Array) -> Array:
+    """Online update for one sample. state: int32[M, C, 2F]."""
+    lits = literals(x)  # bool[2F]
+    k_neg, k_tgt, k_not = jax.random.split(key, 3)
+    # random negative class != y
+    M = cfg.n_classes
+    neg = jax.random.randint(k_neg, (), 0, M - 1)
+    neg = jnp.where(neg >= y, neg + 1, neg).astype(jnp.int32)
+
+    new_tgt = _class_feedback(cfg, k_tgt, state[y], lits, jnp.bool_(True))
+    state = state.at[y].set(new_tgt)
+    new_neg = _class_feedback(cfg, k_not, state[neg], lits, jnp.bool_(False))
+    return state.at[neg].set(new_neg)
+
+
+@partial(jax.jit, static_argnums=0, donate_argnums=1)
+def train_batch(
+    cfg: TMConfig, state: Array, key: Array, xb: Array, yb: Array
+) -> Array:
+    """Sequential (online) updates over a batch. xb: {0,1}[B,F], yb: int32[B]."""
+
+    def step(st, inp):
+        k, x, y = inp
+        return _sample_update(cfg, st, k, x, y), None
+
+    keys = jax.random.split(key, xb.shape[0])
+    xb = xb.astype(jnp.bool_)
+    state, _ = jax.lax.scan(step, state, (keys, xb, yb))
+    return state
+
+
+@partial(jax.jit, static_argnums=0, donate_argnums=1)
+def train_batch_parallel(
+    cfg: TMConfig, state: Array, key: Array, xb: Array, yb: Array
+) -> Array:
+    """Data-parallel (summed-delta) batch update.
+
+    Computes every sample's feedback against the SAME pre-batch state and
+    applies the summed, clipped deltas — the standard approximation used by
+    parallel TM implementations (CAIR CUDA TM, arXiv:2009.04861).  Trades
+    exact online semantics for a vmap that parallelizes over the batch —
+    this is what makes the Fig-8 training node fast on SIMD hardware.
+    """
+    N = cfg.n_states
+
+    def sample_delta(k, x, yv):
+        lits = literals(x)
+        k_neg, k_tgt, k_not = jax.random.split(k, 3)
+        M = cfg.n_classes
+        neg = jax.random.randint(k_neg, (), 0, M - 1)
+        neg = jnp.where(neg >= yv, neg + 1, neg).astype(jnp.int32)
+        d = jnp.zeros((M, cfg.n_clauses, cfg.n_literals), jnp.int32)
+        new_t = _class_feedback(cfg, k_tgt, state[yv], lits, jnp.bool_(True))
+        d = d.at[yv].add(new_t - state[yv])
+        new_n = _class_feedback(cfg, k_not, state[neg], lits, jnp.bool_(False))
+        return d.at[neg].add(new_n - state[neg])
+
+    keys = jax.random.split(key, xb.shape[0])
+    deltas = jax.vmap(sample_delta)(keys, xb.astype(jnp.bool_), yb)
+    return jnp.clip(state + jnp.sum(deltas, axis=0), 1, 2 * N)
+
+
+def fit(
+    cfg: TMConfig,
+    state: Array,
+    key: Array,
+    x: Array,
+    y: Array,
+    *,
+    epochs: int = 10,
+    batch: int = 128,
+    shuffle: bool = True,
+    parallel: bool = False,
+) -> Array:
+    """Host-side epoch loop (the paper's Raspberry-Pi-class training node)."""
+    n = x.shape[0]
+    n_batches = max(1, n // batch)
+    for e in range(epochs):
+        key, kshuf = jax.random.split(key)
+        order = (
+            jax.random.permutation(kshuf, n) if shuffle else jnp.arange(n)
+        )
+        for b in range(n_batches):
+            idx = order[b * batch : (b + 1) * batch]
+            key, kb = jax.random.split(key)
+            step = train_batch_parallel if parallel else train_batch
+            state = step(cfg, state, kb, x[idx], y[idx])
+    return state
+
+
+def accuracy(cfg: TMConfig, state: Array, x: Array, y: Array) -> float:
+    from .tm import predict
+
+    pred = predict(cfg, state, x)
+    return float(jnp.mean((pred == y).astype(jnp.float32)))

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: dense bitpacked TM clause evaluation.
+
+The paper's clause compute (Fig 2, green) — every included literal ANDed
+into a 1-bit clause output — adapted to the TPU memory hierarchy:
+
+  * the batch dimension is bit-packed 32-wide into uint32 lanes (the
+    paper's word-batching, Fig 4.5), so one VPU op processes
+    32 datapoints x 8x128 lanes;
+  * the include mask block and the packed-literal block are staged in VMEM
+    via BlockSpec; the literal reduction runs out of VREGs;
+  * grid = (clause blocks x batch-word blocks), both parallel.
+
+VMEM working set per step: BC*L2 (mask, int8-ish) + L2*BW*4 (literals)
++ BC*BW*4 (acc) bytes — BC/BW chosen so this sits well under ~16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ONES = 0xFFFFFFFF  # python int: safe to close over in kernels
+
+
+def _clause_eval_kernel(actions_ref, lits_ref, out_ref):
+    a = actions_ref[...]  # int32 {0,1} [BC, L2] (VMEM)
+    lits = lits_ref[...]  # uint32 [L2, BW]      (VMEM)
+    bc, l2 = a.shape
+    bw = lits.shape[1]
+
+    def body(k, acc):
+        a_k = jax.lax.dynamic_index_in_dim(a, k, axis=1, keepdims=False)  # [BC]
+        w_k = jax.lax.dynamic_index_in_dim(lits, k, axis=0, keepdims=False)  # [BW]
+        masked = jnp.where((a_k == 1)[:, None], w_k[None, :], jnp.uint32(ONES))
+        return acc & masked
+
+    acc = jax.lax.fori_loop(0, l2, body, jnp.full((bc, bw), jnp.uint32(ONES), jnp.uint32))
+    nonempty = jnp.sum(a, axis=1, keepdims=True) > 0
+    out_ref[...] = jnp.where(nonempty, acc, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_clauses", "block_words", "interpret"))
+def clause_eval(
+    actions: jax.Array,  # {0,1}[NC, L2] int32
+    packed_lits: jax.Array,  # uint32[L2, W]
+    *,
+    block_clauses: int = 128,
+    block_words: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """uint32[NC, W] clause output words (empty clause -> 0)."""
+    nc, l2 = actions.shape
+    l2_, w = packed_lits.shape
+    assert l2 == l2_
+    bc = min(block_clauses, nc)
+    bw = min(block_words, w)
+    nc_pad = -(-nc // bc) * bc
+    w_pad = -(-w // bw) * bw
+    actions = jnp.pad(actions.astype(jnp.int32), ((0, nc_pad - nc), (0, 0)))
+    packed_lits = jnp.pad(packed_lits, ((0, 0), (0, w_pad - w)))
+
+    out = pl.pallas_call(
+        _clause_eval_kernel,
+        grid=(nc_pad // bc, w_pad // bw),
+        in_specs=[
+            pl.BlockSpec((bc, l2), lambda i, j: (i, 0)),
+            pl.BlockSpec((l2, bw), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bc, bw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nc_pad, w_pad), jnp.uint32),
+        interpret=interpret,
+    )(actions, packed_lits)
+    return out[:nc, :w]

@@ -1,0 +1,33 @@
+"""jit'd public wrappers for the clause_eval kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import clause_eval
+from .ref import class_sums_from_clause_words
+
+
+@partial(jax.jit, static_argnames=("n_classes", "interpret"))
+def tm_dense_class_sums(
+    actions: jax.Array,  # {0,1}[M, C, 2F]
+    packed_lits: jax.Array,  # uint32[2F, W]
+    *,
+    n_classes: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Full dense bitpacked TM inference -> int32[M, B] class sums.
+
+    Clause evaluation runs in the Pallas kernel; the (cheap) polarity
+    summation is plain jnp on the kernel output.
+    """
+    m, c, l2 = actions.shape
+    clause_words = clause_eval(
+        actions.reshape(m * c, l2), packed_lits, interpret=interpret
+    )
+    pol = jnp.where(jnp.arange(c) % 2 == 0, 1, -1).astype(jnp.int32)
+    pol = jnp.tile(pol, m)
+    return class_sums_from_clause_words(clause_words, pol, n_classes)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the bitpacked clause-evaluation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clause_eval_ref(actions: jax.Array, packed_lits: jax.Array) -> jax.Array:
+    """Dense bitpacked clause evaluation.
+
+    actions:     {0,1}[NC, L2]   include mask (NC = flattened class*clause)
+    packed_lits: uint32[L2, W]   batch-bitpacked literals
+    returns:     uint32[NC, W]   clause output words; empty clause -> 0
+                                 (inference semantics)
+    """
+    ones = jnp.uint32(0xFFFFFFFF)
+
+    def one_clause(a_row):
+        masked = jnp.where(a_row.astype(bool)[:, None], packed_lits, ones)
+        return jax.lax.reduce(masked, ones, jnp.bitwise_and, dimensions=(0,))
+
+    out = jax.vmap(one_clause)(actions)  # [NC, W]
+    nonempty = jnp.any(actions.astype(bool), axis=-1)
+    return jnp.where(nonempty[:, None], out, jnp.uint32(0))
+
+
+def class_sums_from_clause_words(
+    clause_words: jax.Array, pol: jax.Array, n_classes: int
+) -> jax.Array:
+    """uint32[M*C, W], int32[M*C] -> int32[M, W*32]."""
+    mc, w = clause_words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((clause_words[..., None] >> shifts) & 1).astype(jnp.int32)
+    bits = bits.reshape(mc, w * 32)
+    contrib = bits * pol[:, None]
+    return contrib.reshape(n_classes, mc // n_classes, w * 32).sum(axis=1)

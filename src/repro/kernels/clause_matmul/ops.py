@@ -1,0 +1,28 @@
+"""jit'd wrapper: full dense TM class sums via the MXU clause kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import clause_matmul
+
+
+@partial(jax.jit, static_argnames=("n_classes", "interpret"))
+def tm_matmul_class_sums(
+    actions: jax.Array,  # {0,1}[M, C, 2F]
+    lits: jax.Array,  # {0,1}[2F, B]
+    *,
+    n_classes: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """-> int32[M, B] class sums (MXU formulation)."""
+    m, c, l2 = actions.shape
+    fired = clause_matmul(actions.reshape(m * c, l2), lits, interpret=interpret)
+    pol = jnp.tile(
+        jnp.where(jnp.arange(c) % 2 == 0, 1, -1).astype(jnp.int32), m
+    )
+    contrib = fired * pol[:, None]
+    return contrib.reshape(m, c, -1).sum(axis=1)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the MXU-formulated clause evaluation.
+
+Insight: a clause fires iff NO included literal is 0, i.e.
+
+    violations[c, b] = sum_k A[c, k] * (1 - lits[k, b])
+    clause_out[c, b] = (violations == 0) & nonempty[c]
+
+— an integer MATMUL, which is what the TPU's systolic MXU is built for.
+The paper's bitwise AND network (LUT fabric) maps to the VPU; this
+formulation trades 32x word parallelism for the MXU's 197 TFLOP/s.  The
+cross-over (dense models / small batches favor MXU; sparse models / big
+batches favor the packed VPU path) is benchmarked in fig9.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clause_matmul_ref(actions: jax.Array, lits: jax.Array) -> jax.Array:
+    """actions: {0,1}[NC, L2] ; lits: {0,1}[L2, B] -> bool[NC, B]."""
+    a = actions.astype(jnp.int32)
+    viol = a @ (1 - lits.astype(jnp.int32))  # [NC, B]
+    nonempty = jnp.sum(a, axis=1, keepdims=True) > 0
+    return (viol == 0) & nonempty

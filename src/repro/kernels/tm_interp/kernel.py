@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: compressed TM inference from the decoded plan.
+
+TPU adaptation of the paper's instruction-execution pipeline (Fig 5): the
+offset chains are already prefix-summed (program-time decode), so the kernel
+streams *absolute* literal indices.  Per instruction:
+
+    fetch -> literal select (VMEM row gather) -> clause AND (VPU, 32
+    datapoints/lane) -> on clause boundary: signed accumulate into the
+    class-sum bank (VMEM scratch)
+
+Layout:
+  * grid = (batch-word blocks [parallel], instruction blocks [arbitrary]);
+    the clause accumulator and class-sum bank live in VMEM scratch and
+    persist across instruction blocks (the "K-loop" pattern);
+  * the packed-literal panel for the current batch block stays resident in
+    VMEM (L2 x BW uint32 = the accelerator's Feature Memory, Fig 4.5);
+  * instruction operands are int32 vectors staged per block (the
+    Instruction Memory, Fig 4.4).
+
+This mirrors the eFPGA design point: model-agnostic compute, model = data.
+Capacity (I_cap, L2, m_cap) is the synthesis-time choice; contents are
+runtime-tunable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ONES = 0xFFFFFFFF  # python int: safe to close over in kernels
+
+
+def _tm_interp_kernel(
+    lit_idx_ref, last_ref, pol_ref, cls_ref, lits_ref, out_ref, acc_ref, sums_ref
+):
+    bi = lit_idx_ref.shape[0]
+    bw = lits_ref.shape[1]
+    B = bw * 32
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.full((1, bw), jnp.uint32(ONES), jnp.uint32)
+        sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.int32)
+
+    lit_idx = lit_idx_ref[...]
+    last = last_ref[...]
+    pol = pol_ref[...]
+    cls = cls_ref[...]
+    lits = lits_ref[...]  # [L2, BW] uint32 — Feature Memory panel
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def body(t, carry):
+        acc, sums = carry
+        word = jax.lax.dynamic_index_in_dim(
+            lits, lit_idx[t], axis=0, keepdims=False
+        )  # [BW] — Literal Select
+        acc = acc & word  # Clause Compute (32 datapoints/lane)
+        emit = last[t] == 1
+        bits = ((acc[:, None] >> shifts) & 1).reshape(1, B).astype(jnp.int32)
+        contrib = jnp.where(emit, pol[t], 0) * bits  # [1, B]
+        row = jnp.clip(cls[t], 0, sums.shape[0] - 1)
+        sums = jax.lax.dynamic_update_slice(
+            sums, jax.lax.dynamic_slice(sums, (row, 0), (1, B)) + contrib, (row, 0)
+        )
+        acc = jnp.where(emit, jnp.full_like(acc, jnp.uint32(ONES)), acc)
+        return acc, sums
+
+    acc0 = acc_ref[0, :]
+    sums0 = sums_ref[...]
+    acc, sums = jax.lax.fori_loop(0, bi, body, (acc0, sums0))
+    acc_ref[...] = acc[None, :]
+    sums_ref[...] = sums
+    out_ref[...] = sums
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_cap", "block_instructions", "block_words", "interpret")
+)
+def tm_interp(
+    lit_idx: jax.Array,  # int32[I_cap]
+    last_flag: jax.Array,  # int32[I_cap]
+    pol: jax.Array,  # int32[I_cap]
+    cls: jax.Array,  # int32[I_cap]
+    packed_lits: jax.Array,  # uint32[L2, W]
+    *,
+    m_cap: int,
+    block_instructions: int = 512,
+    block_words: int = 4,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compressed inference -> int32[m_cap, W*32] class sums."""
+    i_cap = lit_idx.shape[0]
+    l2, w = packed_lits.shape
+    bi = min(block_instructions, i_cap)
+    bw = min(block_words, w)
+    i_pad = -(-i_cap // bi) * bi
+    w_pad = -(-w // bw) * bw
+
+    def padi(a):  # padded instructions: AND row 0 forever, never emit
+        return jnp.pad(a, (0, i_pad - i_cap))
+
+    lit_idx, last_flag, pol, cls = map(padi, (lit_idx, last_flag, pol, cls))
+    packed_lits = jnp.pad(packed_lits, ((0, 0), (0, w_pad - w)))
+
+    out = pl.pallas_call(
+        _tm_interp_kernel,
+        grid=(w_pad // bw, i_pad // bi),
+        in_specs=[
+            pl.BlockSpec((bi,), lambda j, i: (i,)),
+            pl.BlockSpec((bi,), lambda j, i: (i,)),
+            pl.BlockSpec((bi,), lambda j, i: (i,)),
+            pl.BlockSpec((bi,), lambda j, i: (i,)),
+            pl.BlockSpec((l2, bw), lambda j, i: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m_cap, bw * 32), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m_cap, w_pad * 32), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((1, bw), jnp.uint32),  # clause accumulator
+            pltpu.VMEM((m_cap, bw * 32), jnp.int32),  # class-sum bank
+        ],
+        interpret=interpret,
+    )(lit_idx, last_flag, pol, cls, packed_lits)
+    return out[:, : w * 32]

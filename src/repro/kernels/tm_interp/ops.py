@@ -1,0 +1,67 @@
+"""jit'd wrappers: DecodedPlan -> kernel operands -> class sums/predictions."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.compress import DecodedPlan
+from .kernel import tm_interp
+
+
+def plan_to_operands(
+    plan: DecodedPlan, i_cap: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side: flatten the plan into per-instruction operand vectors.
+
+    Padded slots AND literal row 0 forever and never emit (last=0)."""
+    I = plan.n_includes
+    assert I <= i_cap, f"plan has {I} includes; instruction capacity {i_cap}"
+    lit_idx = np.zeros(i_cap, np.int32)
+    last = np.zeros(i_cap, np.int32)
+    pol = np.zeros(i_cap, np.int32)
+    cls = np.zeros(i_cap, np.int32)
+    lit_idx[:I] = plan.lit_idx
+    # last include of each clause = where clause_id changes (or stream ends)
+    if I > 0:
+        boundary = np.ones(I, bool)
+        boundary[:-1] = plan.clause_id[1:] != plan.clause_id[:-1]
+        last[:I] = boundary.astype(np.int32)
+        pol[:I] = plan.clause_pol[plan.clause_id]
+        cls[:I] = plan.clause_class[plan.clause_id]
+    return lit_idx, last, pol, cls
+
+
+def tm_compressed_class_sums(
+    plan: DecodedPlan,
+    packed_lits: jax.Array,  # uint32[2F, W] (interleaved literal rows)
+    *,
+    m_cap: int,
+    i_cap: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compressed inference via the Pallas kernel -> int32[m_cap, B]."""
+    lit_idx, last, pol, cls = plan_to_operands(plan, i_cap)
+    return tm_interp(
+        jnp.asarray(lit_idx),
+        jnp.asarray(last),
+        jnp.asarray(pol),
+        jnp.asarray(cls),
+        packed_lits,
+        m_cap=m_cap,
+        interpret=interpret,
+    )
+
+
+def pack_interleaved_literals(x: jax.Array) -> jax.Array:
+    """{0,1}[B, F] -> uint32[2F, W] with complement rows interleaved."""
+    from ...core.tm import pack_literals
+
+    B = x.shape[0]
+    pad = (-B) % 32
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return pack_literals(x)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the compressed-plan interpreter kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tm_interp_ref(
+    lit_idx: jax.Array,  # int32[I]  literal slot per include
+    last_flag: jax.Array,  # int32[I] 1 = last include of its clause
+    pol: jax.Array,  # int32[I]  clause polarity (+1/-1), read when last
+    cls: jax.Array,  # int32[I]  class id, read when last
+    packed_lits: jax.Array,  # uint32[L2, W]
+    m_cap: int,
+) -> jax.Array:
+    """Sequential oracle -> int32[m_cap, W*32] class sums.
+
+    Padded instruction slots must have last_flag == 0 and follow all real
+    instructions (their ANDs can only corrupt a clause that never emits).
+    """
+    l2, w = packed_lits.shape
+    B = w * 32
+    ones = jnp.uint32(0xFFFFFFFF)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def unpack(acc):
+        bits = (acc[:, None] >> shifts) & 1
+        return bits.reshape(B).astype(jnp.int32)
+
+    def step(carry, t):
+        acc, sums = carry
+        word = packed_lits[lit_idx[t]]
+        acc = acc & word
+        emit = last_flag[t] == 1
+        contrib = jnp.where(emit, pol[t], 0) * unpack(acc)
+        sums = sums.at[jnp.clip(cls[t], 0, m_cap - 1)].add(contrib)
+        acc = jnp.where(emit, jnp.full_like(acc, ones), acc)
+        return (acc, sums), None
+
+    acc0 = jnp.full((w,), ones, jnp.uint32)
+    sums0 = jnp.zeros((m_cap, B), jnp.int32)
+    (acc, sums), _ = jax.lax.scan(
+        step, (acc0, sums0), jnp.arange(lit_idx.shape[0])
+    )
+    return sums

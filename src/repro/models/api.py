@@ -1,0 +1,68 @@
+"""Uniform model-family API used by the launcher, dry-run and tests.
+
+Every family exposes:
+  param_specs(cfg)            ShapeDtypeStruct pytree (no allocation)
+  init_params(cfg, key)       real params (reduced/smoke configs only)
+  loss(cfg, params, batch)    scalar training loss
+  prefill(cfg, params, batch) (logits, cache)
+  decode(cfg, params, cache, batch) (logits, cache)
+  input_specs(cfg, shape)     batch pytree of ShapeDtypeStruct
+  cache_specs(cfg, shape)     cache pytree of ShapeDtypeStruct (decode)
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+from typing import Any
+
+import jax
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import dense
+from .encdec import Whisper
+from .recurrent_lm import XLSTM, Zamba2
+
+
+class _DenseFamily:
+    param_specs = staticmethod(dense.param_specs)
+    init_params = staticmethod(dense.init_params)
+    loss = staticmethod(dense.loss)
+    prefill = staticmethod(dense.prefill)
+    decode = staticmethod(dense.decode)
+    input_specs = staticmethod(dense.input_specs)
+    cache_specs = staticmethod(dense.cache_specs)
+
+
+_FAMILIES = {
+    "dense": _DenseFamily,
+    "moe": _DenseFamily,  # same trunk, MoE FFN switched by cfg.is_moe
+    "vlm": _DenseFamily,  # early-fusion patches handled by cfg.family
+    "ssm_xlstm": XLSTM,
+    "hybrid": Zamba2,
+    "encdec": Whisper,
+}
+
+
+def family_for(cfg: ArchConfig):
+    return _FAMILIES[cfg.family]
+
+
+def abstract_params(cfg: ArchConfig):
+    return family_for(cfg).param_specs(cfg)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    import math
+
+    specs = abstract_params(cfg)
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(specs))
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE: routed top-k of the experts)."""
+    if not cfg.is_moe:
+        return count_params(cfg)
+    total = count_params(cfg)
+    expert_p = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+    active_expert_p = 3 * cfg.d_model * cfg.d_ff * cfg.top_k * cfg.n_layers
+    return total - expert_p + active_expert_p

@@ -1,0 +1,381 @@
+"""Shared model components: norms, RoPE, GQA attention (+KV cache), MLP,
+embedding, loss.  All layer stacks are scanned (compact HLO at any depth)
+and rematerialized (activation checkpointing) in training.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Array = jax.Array
+PyTree = Any
+
+
+def sds(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return out
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+ATTN_CHUNK = 1024  # kv-block size for the streaming-softmax path
+ATTN_CHUNK_THRESHOLD = 2048  # use streaming path when Skv exceeds this
+
+
+def _plain_attention(q, k, v, *, causal, q_offset, window, kv_len):
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, rep, hd)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+
+    q_pos = jnp.arange(Sq)[:, None] + q_offset  # [Sq, 1]
+    k_pos = jnp.arange(Skv)[None, :]  # [1, Skv]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with custom VJP: streaming-softmax forward + recompute-based
+# backward, so neither direction materializes [.., Sq, Skv] for more than one
+# KV block.  This is the TPU-idiomatic (VMEM-block-resident) formulation.
+# ---------------------------------------------------------------------------
+
+def _block_mask(Sq, C, j, q_offset, causal, window, Skv):
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = j * C + jnp.arange(C)[None, :]
+    mask = k_pos < Skv
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def _flash_fwd_scan(qg, kb, vb, *, causal, q_offset, window, Skv):
+    """qg: [B,Sq,Hkv,rep,hd] (pre-scaled fp32); kb/vb: [nB,B,C,Hkv,hd].
+    -> (out fp32 [B,Sq,Hkv,rep,hd], m, l  [B,Hkv,rep,Sq])"""
+    B, Sq, Hkv, rep, hd = qg.shape
+    nB, _, C = kb.shape[0], kb.shape[1], kb.shape[2]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, kj.astype(jnp.float32))
+        mask = _block_mask(Sq, C, j, q_offset, causal, window, Skv)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+            "bhrqk,bkhd->bqhrd", p, vj.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, rep, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kb, vb, jnp.arange(nB))
+    )
+    return acc, m, l
+
+
+def _flash_prep(q, k, v):
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    C = ATTN_CHUNK
+    nB = -(-Skv // C)
+    pad = nB * C - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))).reshape(
+        B, Sq, Hkv, rep, hd
+    )
+    kb = jnp.moveaxis(k.reshape(B, nB, C, Hkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nB, C, Hkv, hd), 1, 0)
+    return qg, kb, vb, nB, C, pad
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attention(q, k, v, causal, q_offset, window):
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    qg, kb, vb, nB, C, pad = _flash_prep(q, k, v)
+    acc, m, l = _flash_fwd_scan(
+        qg, kb, vb, causal=causal, q_offset=q_offset, window=window, Skv=Skv
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, causal, q_offset, window):
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    qg, kb, vb, nB, C, pad = _flash_prep(q, k, v)
+    acc, m, l = _flash_fwd_scan(
+        qg, kb, vb, causal=causal, q_offset=q_offset, window=window, Skv=Skv
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    res = (q, k, v, out.astype(q.dtype), m, l)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype), res
+
+
+def _flash_bwd(causal, q_offset, window, res, dout):
+    q, k, v, out, m, l = res  # out: [B,Sq,Hkv,rep,hd]
+    B, Sq, Hq, hd = q.shape
+    Skv = k.shape[1]
+    qg, kb, vb, nB, C, pad = _flash_prep(q, k, v)
+    do = dout.reshape(out.shape).astype(jnp.float32)  # [B,Sq,Hkv,rep,hd]
+    out32 = out.astype(jnp.float32)
+    linv = 1.0 / jnp.maximum(l, 1e-30)  # [B,Hkv,rep,Sq]
+    # delta = rowsum(dout * out)  [B,Hkv,rep,Sq]
+    delta = jnp.einsum("bqhrd,bqhrd->bhrq", do, out32)
+
+    def body(dq, inp):
+        kj, vj, j = inp
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, kj.astype(jnp.float32))
+        mask = _block_mask(Sq, C, j, q_offset, causal, window, Skv)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jnp.exp(s - m[..., None]) * linv[..., None]  # normalized probs
+        dv_j = jnp.einsum("bhrqk,bqhrd->bkhd", p, do)
+        dp = jnp.einsum("bqhrd,bkhd->bhrqk", do, vj.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        dq = dq + jnp.einsum("bhrqk,bkhd->bqhrd", ds, kj.astype(jnp.float32))
+        dk_j = jnp.einsum("bhrqk,bqhrd->bkhd", ds, qg)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros_like(qg)
+    dq, (dk, dv) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nB)))
+    dq = (dq / jnp.sqrt(jnp.float32(hd))).reshape(B, Sq, Hq, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, nB * C, k.shape[2], hd)[:, :Skv]
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, nB * C, v.shape[2], hd)[:, :Skv]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def gqa_attention(
+    q: Array,  # [B, Sq, Hq, hd]
+    k: Array,  # [B, Skv, Hkv, hd]
+    v: Array,  # [B, Skv, Hkv, hd]
+    *,
+    causal: bool,
+    q_offset: Array | int = 0,  # absolute position of q[0] (decode)
+    window: int = 0,  # sliding window (0 = unlimited)
+    kv_len: Array | None = None,  # valid kv prefix length (decode masking)
+) -> Array:
+    Sq, Skv = q.shape[1], k.shape[1]
+    if Sq > 1 and Skv > ATTN_CHUNK_THRESHOLD and kv_len is None:
+        return _flash_attention(q, k, v, causal, q_offset, window)
+    return _plain_attention(
+        q, k, v, causal=causal, q_offset=q_offset, window=window, kv_len=kv_len
+    )
+
+
+class AttnParams(NamedTuple):
+    wq: Array  # [D, Hq*hd]
+    wk: Array  # [D, Hkv*hd]
+    wv: Array  # [D, Hkv*hd]
+    wo: Array  # [Hq*hd, D]
+
+
+def attn_param_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> AttnParams:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return AttnParams(
+        wq=sds((D, Hq * hd), dtype),
+        wk=sds((D, Hkv * hd), dtype),
+        wv=sds((D, Hkv * hd), dtype),
+        wo=sds((Hq * hd, D), dtype),
+    )
+
+
+def attention_block(
+    p: AttnParams,
+    x: Array,  # [B, S, D]
+    cfg: ArchConfig,
+    *,
+    positions: Array,  # [S] absolute positions for RoPE
+    causal: bool = True,
+    window: int = 0,
+    cache_kv: Optional[Tuple[Array, Array]] = None,  # decode: full caches
+    cache_pos: Optional[Array] = None,  # decode: write index
+) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Self-attention with optional KV cache read/write.
+
+    Returns (out [B,S,D], updated (k_cache, v_cache) or the fresh (k, v)).
+    """
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p.wq).reshape(B, S, Hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p.wk).reshape(B, S, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p.wv).reshape(B, S, Hkv, hd)
+    q = rope(q, positions[None, :], cfg.rope_theta)
+    k = rope(k, positions[None, :], cfg.rope_theta)
+
+    if cache_kv is None:
+        out = gqa_attention(q, k, v, causal=causal, window=window)
+        kv = (k, v)
+    else:
+        kc, vc = cache_kv  # [B, Smax, Hkv, hd]
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, cache_pos, 0, 0))
+        out = gqa_attention(
+            q,
+            kc,
+            vc,
+            causal=False,
+            q_offset=cache_pos,
+            window=window,
+            kv_len=cache_pos + S,
+        )
+        kv = (kc, vc)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, Hq * hd), p.wo)
+    return out, kv
+
+
+# ---------------------------------------------------------------------------
+# embedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_lookup(embed: Array, tokens: Array) -> Array:
+    from ..dist.sharding import hint
+
+    return hint(jnp.take(embed, tokens, axis=0), "batch", None, None)
+
+
+def lm_logits(x: Array, embed: Array) -> Array:
+    """Tied-embedding readout: [..., D] x [V, D] -> [..., V]."""
+    return jnp.einsum("...d,vd->...v", x, embed)
+
+
+def causal_lm_loss(logits: Array, tokens: Array, true_vocab: int) -> Array:
+    """Next-token cross entropy; padded vocab rows masked out.
+
+    Logits stay vocab-sharded on the ``model`` axis (the log-sum-exp reduces
+    over the sharded dim with a small all-reduce instead of materializing a
+    replicated [B, S, V] fp32 tensor)."""
+    from ..dist.sharding import hint
+
+    V = logits.shape[-1]
+    logits = hint(logits.astype(jnp.float32), "batch", None, "model")
+    vocab_mask = jnp.arange(V) < true_vocab
+    logits = jnp.where(vocab_mask[None, None, :], logits, -1e30)
+    shift_logits = logits[:, :-1]
+    shift_labels = tokens[:, 1:]
+    logz = jax.nn.logsumexp(shift_logits, axis=-1)
+    gold = jnp.take_along_axis(
+        shift_logits, shift_labels[..., None], axis=-1
+    ).squeeze(-1)
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# layer stacks: scanned (compact HLO) or python-unrolled (exact cost counts)
+# ---------------------------------------------------------------------------
+
+def _leading_dim(tree: PyTree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def stack_apply(layer_fn, params_stacked: PyTree, x: Array, *, unrolled: bool) -> Array:
+    """x -> fold layer_fn over the stacked layer axis.
+
+    unrolled=True (analysis variants) uses a Python loop so every layer's
+    cost lands in XLA cost_analysis; unrolled=False scans (one while loop,
+    compact HLO at any depth — the production path).
+    """
+    if unrolled:
+        h = x
+        for i in range(_leading_dim(params_stacked)):
+            p_i = jax.tree.map(lambda a: a[i], params_stacked)
+            h = layer_fn(p_i, h)
+        return h
+    h, _ = jax.lax.scan(lambda hh, p: (layer_fn(p, hh), None), x, params_stacked)
+    return h
+
+
+def stack_apply_collect(layer_fn, params_stacked: PyTree, x: Array, *, unrolled: bool):
+    """Like stack_apply but layer_fn returns (h, aux); auxes stacked on axis 0."""
+    if unrolled:
+        h, auxes = x, []
+        for i in range(_leading_dim(params_stacked)):
+            p_i = jax.tree.map(lambda a: a[i], params_stacked)
+            h, aux = layer_fn(p_i, h)
+            auxes.append(aux)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *auxes)
+        return h, stacked
+    return jax.lax.scan(lambda hh, p: layer_fn(p, hh), x, params_stacked)
+
+
+def stack_apply_with_state(layer_fn, params_stacked: PyTree, x: Array, state: PyTree,
+                           *, unrolled: bool):
+    """layer_fn(p, h, s) -> (h, s'); threads per-layer state (leaves stacked
+    on axis 0)."""
+    if unrolled:
+        h, outs = x, []
+        for i in range(_leading_dim(params_stacked)):
+            p_i = jax.tree.map(lambda a: a[i], params_stacked)
+            s_i = jax.tree.map(lambda a: a[i], state)
+            h, s_new = layer_fn(p_i, h, s_i)
+            outs.append(s_new)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *outs)
+        return h, stacked
+
+    def body(hh, inp):
+        p, s = inp
+        return layer_fn(p, hh, s)
+
+    return jax.lax.scan(body, x, (params_stacked, state))

@@ -1,0 +1,216 @@
+"""Dense (and MoE) GQA decoder LM — covers starcoder2-7b, stablelm-12b/3b,
+deepseek-7b, moonshot-v1-16b (MoE), llama4-maverick (MoE), and the internvl2
+backbone (early-fusion patch embeddings).
+
+Structure per layer (pre-norm):  x += attn(RMSNorm(x)); x += ffn(RMSNorm(x))
+FFN is SwiGLU for dense configs, top-k MoE for MoE configs.
+Layers are stacked and scanned; training remats each layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from .common import (
+    AttnParams,
+    attention_block,
+    attn_param_specs,
+    causal_lm_loss,
+    embed_lookup,
+    lm_logits,
+    rms_norm,
+    sds,
+    stack_apply,
+    stack_apply_collect,
+    stack_apply_with_state,
+)
+from .moe import moe_ffn, moe_param_specs
+
+Array = jax.Array
+
+
+def _stack_specs(spec_tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), spec_tree
+    )
+
+
+def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    D, F, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    layer: Dict[str, Any] = {
+        "attn": attn_param_specs(cfg)._asdict(),
+        "attn_norm": sds((D,)),
+        "mlp_norm": sds((D,)),
+    }
+    if cfg.is_moe:
+        layer["moe"] = moe_param_specs(cfg)
+    else:
+        layer["mlp"] = {
+            "w_gate": sds((D, F)),
+            "w_up": sds((D, F)),
+            "w_down": sds((F, D)),
+        }
+    out: Dict[str, Any] = {
+        "embed": sds((cfg.padded_vocab, D)),
+        "final_norm": sds((D,)),
+        "layers": _stack_specs(layer, L),
+    }
+    if cfg.family == "vlm":
+        out["patch_proj"] = sds((D, D))  # stub ViT output -> backbone space
+    return out
+
+
+def init_params(cfg: ArchConfig, key: Array) -> Dict[str, Any]:
+    specs = param_specs(cfg)
+    flat, tree = jax.tree.flatten(specs)
+    keys = jax.random.split(key, len(flat))
+    leaves = [
+        (jax.random.normal(k, s.shape, s.dtype) * 0.02).astype(s.dtype)
+        for k, s in zip(keys, flat)
+    ]
+    return jax.tree.unflatten(tree, leaves)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _ffn(p_layer: Dict[str, Any], x: Array, cfg: ArchConfig) -> Array:
+    if cfg.is_moe:
+        return moe_ffn(p_layer["moe"], x, cfg)
+    m = p_layer["mlp"]
+    g = jnp.einsum("bsd,df->bsf", x, m["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, m["w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, m["w_down"])
+
+
+def _layer(p: Dict[str, Any], h: Array, cfg: ArchConfig, positions: Array) -> Array:
+    a_in = rms_norm(h, p["attn_norm"])
+    attn_out, _ = attention_block(
+        AttnParams(**p["attn"]), a_in, cfg, positions=positions, causal=True,
+        window=cfg.window,
+    )
+    h = h + attn_out
+    f_in = rms_norm(h, p["mlp_norm"])
+    h = h + _ffn(p, f_in, cfg)
+    return h
+
+
+def _trunk(params, h: Array, cfg: ArchConfig, positions: Array, remat: bool) -> Array:
+    def layer_fn(p, hh):
+        return _layer(p, hh, cfg, positions)
+
+    fn = jax.checkpoint(layer_fn) if remat else layer_fn
+    h = stack_apply(fn, params["layers"], h, unrolled=cfg.analysis_unroll)
+    return rms_norm(h, params["final_norm"])
+
+
+def _embed_inputs(params, batch: Dict[str, Array], cfg: ArchConfig) -> Array:
+    h = embed_lookup(params["embed"], batch["tokens"])  # [B, St, D]
+    if cfg.family == "vlm":
+        patches = jnp.einsum("bpd,de->bpe", batch["patches"], params["patch_proj"])
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)  # early fusion
+    return h
+
+
+def loss(cfg: ArchConfig, params, batch: Dict[str, Array]) -> Array:
+    h = _embed_inputs(params, batch, cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    h = _trunk(params, h, cfg, positions, remat=True)
+    if cfg.family == "vlm":
+        h = h[:, cfg.n_patches :]  # loss on text positions only
+    logits = lm_logits(h, params["embed"])
+    return causal_lm_loss(logits, batch["tokens"], cfg.vocab)
+
+
+def prefill(cfg: ArchConfig, params, batch: Dict[str, Array]):
+    """-> (last-position logits [B, V], kv cache [L, B, S, Hkv, hd] x2)."""
+    h = _embed_inputs(params, batch, cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    def layer_fn(p, hh):
+        a_in = rms_norm(hh, p["attn_norm"])
+        attn_out, kv = attention_block(
+            AttnParams(**p["attn"]), a_in, cfg, positions=positions, causal=True,
+            window=cfg.window,
+        )
+        hh = hh + attn_out
+        f_in = rms_norm(hh, p["mlp_norm"])
+        hh = hh + _ffn(p, f_in, cfg)
+        return hh, kv
+
+    h, caches = stack_apply_collect(
+        lambda p, hh: layer_fn(p, hh), params["layers"], h,
+        unrolled=cfg.analysis_unroll,
+    )
+    h = rms_norm(h, params["final_norm"])
+    logits = lm_logits(h[:, -1], params["embed"])
+    return logits, {"k": caches[0], "v": caches[1]}
+
+
+def decode(cfg: ArchConfig, params, cache: Dict[str, Array], batch: Dict[str, Array]):
+    """One-token step. batch: token [B, 1], pos scalar. Cache donated."""
+    h = embed_lookup(params["embed"], batch["token"])  # [B, 1, D]
+    pos = batch["pos"]
+    positions = pos[None] if pos.ndim == 0 else pos
+
+    def layer_fn(p, hh, c):
+        kc, vc = c
+        a_in = rms_norm(hh, p["attn_norm"])
+        attn_out, (kc, vc) = attention_block(
+            AttnParams(**p["attn"]), a_in, cfg,
+            positions=jnp.atleast_1d(pos), causal=True, window=cfg.window,
+            cache_kv=(kc, vc), cache_pos=pos,
+        )
+        hh = hh + attn_out
+        f_in = rms_norm(hh, p["mlp_norm"])
+        hh = hh + _ffn(p, f_in, cfg)
+        return hh, (kc, vc)
+
+    h, (k_new, v_new) = stack_apply_with_state(
+        layer_fn, params["layers"], h, (cache["k"], cache["v"]),
+        unrolled=cfg.analysis_unroll,
+    )
+    h = rms_norm(h, params["final_norm"])
+    logits = lm_logits(h[:, -1], params["embed"])
+    return logits, {"k": k_new, "v": v_new}
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B = shape.global_batch
+    if shape.kind == "train":
+        S = shape.seq_len
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = sds((B, S - cfg.n_patches), jnp.int32)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        S = shape.seq_len
+        if cfg.family == "vlm":
+            return {
+                "patches": sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+                "tokens": sds((B, S - cfg.n_patches), jnp.int32),
+            }
+        return {"tokens": sds((B, S), jnp.int32)}
+    # decode
+    return {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    kv = sds((L, B, S, Hkv, hd), jnp.bfloat16)
+    return {"k": kv, "v": kv}

@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder backbone (whisper-medium).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings [B, encoder_len, D].  24 bidirectional
+encoder layers + 24 causal decoder layers with cross-attention; decode uses
+a self-attention KV cache (cross KV computed once at prefill).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from .common import (
+    AttnParams,
+    attention_block,
+    attn_param_specs,
+    stack_apply,
+    stack_apply_collect,
+    stack_apply_with_state,
+    causal_lm_loss,
+    embed_lookup,
+    gqa_attention,
+    lm_logits,
+    rms_norm,
+    rope,
+    sds,
+)
+
+Array = jax.Array
+
+
+def _stack(spec_tree, n: int):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), spec_tree
+    )
+
+
+class Whisper:
+    @staticmethod
+    def param_specs(cfg: ArchConfig) -> Dict[str, Any]:
+        D, F = cfg.d_model, cfg.d_ff
+        Le = cfg.n_encoder_layers or cfg.n_layers
+        Ld = cfg.n_layers
+        mlp = {"w_up": sds((D, F)), "w_down": sds((F, D))}
+        enc_layer = {
+            "attn": attn_param_specs(cfg)._asdict(),
+            "attn_norm": sds((D,)),
+            "mlp_norm": sds((D,)),
+            "mlp": dict(mlp),
+        }
+        dec_layer = {
+            "self_attn": attn_param_specs(cfg)._asdict(),
+            "cross_attn": attn_param_specs(cfg)._asdict(),
+            "self_norm": sds((D,)),
+            "cross_norm": sds((D,)),
+            "mlp_norm": sds((D,)),
+            "mlp": dict(mlp),
+        }
+        return {
+            "embed": sds((cfg.padded_vocab, D)),
+            "enc_final_norm": sds((D,)),
+            "dec_final_norm": sds((D,)),
+            "encoder": _stack(enc_layer, Le),
+            "decoder": _stack(dec_layer, Ld),
+        }
+
+    @staticmethod
+    def init_params(cfg: ArchConfig, key):
+        specs = Whisper.param_specs(cfg)
+        flat, tree = jax.tree.flatten(specs)
+        keys = jax.random.split(key, len(flat))
+        leaves = [
+            (jax.random.normal(k, s.shape) * 0.02).astype(s.dtype)
+            for k, s in zip(keys, flat)
+        ]
+        return jax.tree.unflatten(tree, leaves)
+
+    # -- encoder ------------------------------------------------------------
+
+    @staticmethod
+    def encode(cfg: ArchConfig, params, frames: Array, *, remat: bool) -> Array:
+        S = frames.shape[1]
+        positions = jnp.arange(S)
+
+        def layer_fn(p, hh):
+            a_in = rms_norm(hh, p["attn_norm"])
+            out, _ = attention_block(
+                AttnParams(**p["attn"]), a_in, cfg, positions=positions,
+                causal=False,
+            )
+            hh = hh + out
+            m_in = rms_norm(hh, p["mlp_norm"])
+            u = jax.nn.gelu(jnp.einsum("bsd,df->bsf", m_in, p["mlp"]["w_up"]))
+            return hh + jnp.einsum("bsf,fd->bsd", u, p["mlp"]["w_down"])
+
+        fn = jax.checkpoint(layer_fn) if remat else layer_fn
+        h = stack_apply(fn, params["encoder"], frames, unrolled=cfg.analysis_unroll)
+        return rms_norm(h, params["enc_final_norm"])
+
+    # -- decoder ------------------------------------------------------------
+
+    @staticmethod
+    def _cross(cfg, p, hh, enc_kv):
+        B, S, D = hh.shape
+        Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        a_in = rms_norm(hh, p["cross_norm"])
+        q = jnp.einsum("bsd,dh->bsh", a_in, p["cross_attn"]["wq"]).reshape(B, S, Hq, hd)
+        k, v = enc_kv
+        out = gqa_attention(q, k, v, causal=False)
+        out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, Hq * hd), p["cross_attn"]["wo"])
+        return hh + out
+
+    @staticmethod
+    def _enc_kv(cfg, p, enc: Array):
+        B, Se, D = enc.shape
+        Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        k = jnp.einsum("bsd,dh->bsh", enc, p["cross_attn"]["wk"]).reshape(B, Se, Hkv, hd)
+        v = jnp.einsum("bsd,dh->bsh", enc, p["cross_attn"]["wv"]).reshape(B, Se, Hkv, hd)
+        return k, v
+
+    @staticmethod
+    def _dec_layer(cfg, p, hh, enc, positions, cache=None, pos=None):
+        a_in = rms_norm(hh, p["self_norm"])
+        if cache is None:
+            out, kv = attention_block(
+                AttnParams(**p["self_attn"]), a_in, cfg, positions=positions,
+                causal=True,
+            )
+        else:
+            out, kv = attention_block(
+                AttnParams(**p["self_attn"]), a_in, cfg,
+                positions=jnp.atleast_1d(pos), causal=True,
+                cache_kv=cache, cache_pos=pos,
+            )
+        hh = hh + out
+        hh = Whisper._cross(cfg, p, hh, Whisper._enc_kv(cfg, p, enc))
+        m_in = rms_norm(hh, p["mlp_norm"])
+        u = jax.nn.gelu(jnp.einsum("bsd,df->bsf", m_in, p["mlp"]["w_up"]))
+        return hh + jnp.einsum("bsf,fd->bsd", u, p["mlp"]["w_down"]), kv
+
+    @staticmethod
+    def loss(cfg: ArchConfig, params, batch):
+        enc = Whisper.encode(cfg, params, batch["frames"], remat=True)
+        tokens = batch["tokens"]
+        h = embed_lookup(params["embed"], tokens)
+        positions = jnp.arange(tokens.shape[1])
+
+        def layer_fn(p, hh):
+            hh, _ = Whisper._dec_layer(cfg, p, hh, enc, positions)
+            return hh
+
+        fn = jax.checkpoint(layer_fn)
+        h = stack_apply(fn, params["decoder"], h, unrolled=cfg.analysis_unroll)
+        h = rms_norm(h, params["dec_final_norm"])
+        return causal_lm_loss(lm_logits(h, params["embed"]), tokens, cfg.vocab)
+
+    @staticmethod
+    def prefill(cfg: ArchConfig, params, batch):
+        enc = Whisper.encode(cfg, params, batch["frames"], remat=False)
+        tokens = batch["tokens"]
+        h = embed_lookup(params["embed"], tokens)
+        positions = jnp.arange(tokens.shape[1])
+
+        def layer_fn(p, hh):
+            hh, kv = Whisper._dec_layer(cfg, p, hh, enc, positions)
+            return hh, kv
+
+        h, kv = stack_apply_collect(
+            layer_fn, params["decoder"], h, unrolled=cfg.analysis_unroll
+        )
+        h = rms_norm(h, params["dec_final_norm"])
+        # cross-KV cached once for decode
+        def ckv(p):
+            return Whisper._enc_kv(cfg, p, enc)
+
+        cross = jax.vmap(lambda p: ckv(p))(params["decoder"])
+        cache = {"k": kv[0], "v": kv[1], "ck": cross[0], "cv": cross[1]}
+        return lm_logits(h[:, -1], params["embed"]), cache
+
+    @staticmethod
+    def decode(cfg: ArchConfig, params, cache, batch):
+        h = embed_lookup(params["embed"], batch["token"])
+        pos = batch["pos"]
+        B = h.shape[0]
+        Hq, hd = cfg.n_heads, cfg.head_dim
+
+        def body(hh, inp):
+            p, (kc, vc, ck, cv) = inp
+            a_in = rms_norm(hh, p["self_norm"])
+            out, (kc, vc) = attention_block(
+                AttnParams(**p["self_attn"]), a_in, cfg,
+                positions=jnp.atleast_1d(pos), causal=True,
+                cache_kv=(kc, vc), cache_pos=pos,
+            )
+            hh = hh + out
+            # cross-attention against cached encoder KV
+            a_in = rms_norm(hh, p["cross_norm"])
+            q = jnp.einsum("bsd,dh->bsh", a_in, p["cross_attn"]["wq"]).reshape(
+                B, 1, Hq, hd
+            )
+            out = gqa_attention(q, ck, cv, causal=False)
+            hh = hh + jnp.einsum(
+                "bsh,hd->bsd", out.reshape(B, 1, Hq * hd), p["cross_attn"]["wo"]
+            )
+            m_in = rms_norm(hh, p["mlp_norm"])
+            u = jax.nn.gelu(jnp.einsum("bsd,df->bsf", m_in, p["mlp"]["w_up"]))
+            hh = hh + jnp.einsum("bsf,fd->bsd", u, p["mlp"]["w_down"])
+            return hh, (kc, vc)
+
+        h, (k_new, v_new) = stack_apply_with_state(
+            lambda p, hh, c: body(hh, (p, c)), params["decoder"], h,
+            (cache["k"], cache["v"], cache["ck"], cache["cv"]),
+            unrolled=cfg.analysis_unroll,
+        )
+        h = rms_norm(h, params["dec_final_norm"])
+        cache = {"k": k_new, "v": v_new, "ck": cache["ck"], "cv": cache["cv"]}
+        return lm_logits(h[:, -1], params["embed"]), cache
+
+    @staticmethod
+    def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+        B = shape.global_batch
+        frames = sds((B, cfg.encoder_len, cfg.d_model), jnp.bfloat16)
+        if shape.kind in ("train", "prefill"):
+            return {"frames": frames, "tokens": sds((B, shape.seq_len), jnp.int32)}
+        return {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+    @staticmethod
+    def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+        B, S = shape.global_batch, shape.seq_len
+        L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        return {
+            "k": sds((L, B, S, Hkv, hd), jnp.bfloat16),
+            "v": sds((L, B, S, Hkv, hd), jnp.bfloat16),
+            "ck": sds((L, B, cfg.encoder_len, Hkv, hd), jnp.bfloat16),
+            "cv": sds((L, B, cfg.encoder_len, Hkv, hd), jnp.bfloat16),
+        }

@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block — chunked parallel scan for training/prefill, O(1)
+recurrent step for decode (this is what makes ``long_500k`` runnable).
+
+Simplified-but-faithful SSD (arXiv:2405.21060): scalar decay per head,
+single B/C group.  Recurrence per head h with state N, head dim P:
+
+    H_t = exp(dt_t * A_h) * H_{t-1} + dt_t * B_t (x)  (outer product  N x P)
+    y_t = C_t · H_t + D_h * x_t
+
+Chunked evaluation: intra-chunk attention-like term + inter-chunk state scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import rms_norm, sds
+
+Array = jax.Array
+
+CONV_K = 4
+
+
+def ssm_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_headdim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def ssm_param_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    D = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    d_conv = d_inner + 2 * N  # conv over x, B, C channels
+    return {
+        "in_proj": sds((D, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": sds((CONV_K, d_conv), dtype),
+        "conv_b": sds((d_conv,), dtype),
+        "A_log": sds((H,), jnp.float32),
+        "D": sds((H,), jnp.float32),
+        "dt_bias": sds((H,), jnp.float32),
+        "norm": sds((d_inner,), dtype),
+        "out_proj": sds((d_inner, D), dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: Array):
+    d_inner, H, P, N = ssm_dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, k=4. xBC: [B, S, Cc]."""
+    pads = jnp.pad(xBC, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + xBC.shape[1]] * w[i][None, None, :] for i in range(CONV_K)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssm_forward(
+    p: Dict[str, Array], x: Array, cfg: ArchConfig, *, chunk: int = 256
+) -> Array:
+    """x: [B, S, D] -> [B, S, D] (training / prefill form)."""
+    B, S, D = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs, Bs, Cs = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H] negative
+    dA = dt * A[None, None]  # [B,S,H] log-decay per step
+
+    Q = min(chunk, S)
+    assert S % Q == 0, "seq must divide chunk"
+    nC = S // Q
+
+    def reshape_c(a):
+        return a.reshape(B, nC, Q, *a.shape[2:])
+
+    xs_c, Bs_c, Cs_c, dA_c, dt_c = map(reshape_c, (xs, Bs, Cs, dA, dt))
+    cum = jnp.cumsum(dA_c, axis=2)  # [B,nC,Q,H] cumulative log-decay
+    total = cum[:, :, -1]  # [B,nC,H]
+
+    # intra-chunk (attention-like, causal)
+    xw = xs_c * dt_c[..., None]  # dt-weighted inputs [B,nC,Q,H,P]
+    scores_bc = jnp.einsum("bcqn,bckn->bcqk", Cs_c, Bs_c)  # [B,nC,Q,Q]
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nC,Q,K,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores_bc, w, xw.astype(jnp.float32))
+
+    # chunk states: S_c = sum_s exp(total - cum_s) * B_s (x) xw_s  -> [B,nC,H,N,P]
+    state_w = jnp.exp(total[:, :, None] - cum)  # [B,nC,Q,H]
+    chunk_state = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchnp", Bs_c, state_w, xw.astype(jnp.float32)
+    )
+
+    # inter-chunk scan over nC
+    def scan_body(h_prev, inp):
+        st, tot = inp  # [B,H,N,P], [B,H]
+        h_new = jnp.exp(tot)[..., None, None] * h_prev + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_body,
+        h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # [B,nC,H,N,P] state before chunk
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchnp->bcqhp", Cs_c, jnp.exp(cum), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def ssm_decode_step(
+    p: Dict[str, Array],
+    x: Array,  # [B, 1, D]
+    cache: Tuple[Array, Array],  # (conv_state [B, K-1, Cc], ssm_state [B,H,N,P])
+    cfg: ArchConfig,
+) -> Tuple[Array, Tuple[Array, Array]]:
+    B = x.shape[0]
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_state, h = cache
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]
+    z, xBC, dt = _split_proj(cfg, zxbcdt[:, None, :])
+    xBC = xBC[:, 0]
+    # conv ring buffer: [B, K-1, Cc] previous inputs
+    full = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # [B,K,Cc]
+    conv_out = jnp.einsum("bkc,kc->bc", full, p["conv_w"]) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv_out)
+    xs, Bs, Cs = jnp.split(xBC_t, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_t * A[None])  # [B,H]
+    contrib = jnp.einsum("bn,bh,bhp->bhnp", Bs.astype(jnp.float32), dt_t, xs.astype(jnp.float32))
+    h = decay[..., None, None] * h + contrib
+    y = jnp.einsum("bn,bhnp->bhp", Cs.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0])
+    y = rms_norm(y, p["norm"])
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    new_conv = full[:, 1:]
+    return out, (new_conv, h)
+
+
+def ssm_cache_specs(cfg: ArchConfig, batch: int, n_layers: int):
+    d_inner, H, P, N = ssm_dims(cfg)
+    d_conv = d_inner + 2 * N
+    return (
+        sds((n_layers, batch, CONV_K - 1, d_conv), jnp.bfloat16),
+        sds((n_layers, batch, H, N, P), jnp.float32),
+    )

@@ -1,0 +1,220 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, recurrent scan).  Layers alternate mLSTM/sLSTM.
+
+mLSTM per head (state C: hd x hd matrix, normalizer n: hd, stabilizer m):
+    f_t, i_t exp/sigmoid input-conditioned gates
+    C_t = f C_{t-1} + i v_t k_t^T ;  n_t = f n_{t-1} + i k_t
+    h_t = o_t * (C_t q_t) / max(|n_t . q_t|, 1)
+Chunkwise: quadratic within chunk, recurrent (C, n, m) across chunks —
+training is sub-quadratic in S, decode is O(1)/token (long_500k path).
+
+sLSTM per unit (c, n, m scalar states; per-head block-diag recurrence):
+    c_t = f c_{t-1} + i tanh(z);  n_t = f n_{t-1} + i;  h = o * c/n
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import rms_norm, sds
+
+Array = jax.Array
+
+
+def xlstm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return cfg.d_model, H, hd
+
+
+def mlstm_param_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    D, H, hd = xlstm_dims(cfg)
+    return {
+        "wq": sds((D, D), dtype),
+        "wk": sds((D, D), dtype),
+        "wv": sds((D, D), dtype),
+        "wi": sds((D, H), jnp.float32),  # input gate (per head)
+        "wf": sds((D, H), jnp.float32),  # forget gate (per head)
+        "wo": sds((D, D), dtype),  # output gate (per unit)
+        "norm": sds((D,), dtype),
+        "proj": sds((D, D), dtype),
+    }
+
+
+def slstm_param_specs(cfg: ArchConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    D, H, hd = xlstm_dims(cfg)
+    return {
+        "wz": sds((D, D), dtype),
+        "wi": sds((D, D), jnp.float32),
+        "wf": sds((D, D), jnp.float32),
+        "wo": sds((D, D), dtype),
+        "rz": sds((H, hd, hd), dtype),  # block-diagonal recurrence
+        "ri": sds((H, hd, hd), jnp.float32),
+        "rf": sds((H, hd, hd), jnp.float32),
+        "ro": sds((H, hd, hd), dtype),
+        "norm": sds((D,), dtype),
+        "proj": sds((D, D), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_forward(p, x: Array, cfg: ArchConfig, *, chunk: int = 256) -> Array:
+    """x: [B, S, D] -> [B, S, D] chunkwise-parallel."""
+    B, S, D = x.shape
+    _, H, hd = xlstm_dims(cfg)
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, H, hd) / jnp.sqrt(
+        jnp.float32(hd)
+    ).astype(x.dtype)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, H, hd)
+    ig = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"])  # log-space
+    fg = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"])
+    )
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo"]))
+
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nC = S // Q
+    rs = lambda a: a.reshape(B, nC, Q, *a.shape[2:])
+    qc, kc, vc, ic, fc = map(rs, (q, k, v, ig, fg))
+
+    cumf = jnp.cumsum(fc, axis=2)  # [B,nC,Q,H]
+    # intra-chunk log weights: lw[t,s] = cumf_t - cumf_s + i_s  (s <= t)
+    lw = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + ic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    lw = jnp.where(causal[None, None, :, :, None], lw, -jnp.inf)
+    # inter-chunk state contribution log weight: cumf_t + m_prev
+    # scan chunks carrying (C [B,H,hd,hd], n [B,H,hd], m [B,H])
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qq, kk, vv, ii, ff, lww, cf = inp  # per-chunk tensors (leading B)
+        total_f = cf[:, -1]  # [B,H]
+        # stabilizer per t: max of intra weights and the state weight
+        state_lw = cf + m[:, None, :]  # [B,Q,H]
+        m_new_t = jnp.maximum(jnp.max(lww, axis=2), state_lw)  # [B,Q,H]
+        w_intra = jnp.exp(lww - m_new_t[:, :, None, :])  # [B,Q,K,H]
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qq.astype(jnp.float32), kk.astype(jnp.float32))
+        y_intra = jnp.einsum("bqkh,bqkh,bkhd->bqhd", scores, w_intra, vv.astype(jnp.float32))
+        norm_intra = jnp.einsum("bqkh,bqkh->bqh", scores, w_intra)
+        w_state = jnp.exp(state_lw - m_new_t)  # [B,Q,H]
+        y_state = jnp.einsum("bqhd,bhde,bqh->bqhe", qq.astype(jnp.float32), C, w_state)
+        norm_state = jnp.einsum("bqhd,bhd,bqh->bqh", qq.astype(jnp.float32), n, w_state)
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_state), jnp.exp(-m_new_t))
+        y = (y_intra + y_state) / denom[..., None]  # [B,Q,H,hd]
+        # update chunk state
+        m_next = jnp.maximum(
+            total_f + m, jnp.max(ii + total_f[:, None] - cf, axis=1)
+        )  # [B,H]
+        w_keep = jnp.exp(total_f + m - m_next)  # [B,H]
+        w_add = jnp.exp(ii + total_f[:, None] - cf - m_next[:, None, :])  # [B,Q,H]
+        C_new = C * w_keep[..., None, None] + jnp.einsum(
+            "bqh,bqhd,bqhe->bhde", w_add, kk.astype(jnp.float32), vv.astype(jnp.float32)
+        )
+        n_new = n * w_keep[..., None] + jnp.einsum(
+            "bqh,bqhd->bhd", w_add, kk.astype(jnp.float32)
+        )
+        return (C_new, n_new, m_next), y
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    swap = lambda a: jnp.moveaxis(a, 1, 0)  # scan over chunks
+    (_, _, _), ys = jax.lax.scan(
+        chunk_step,
+        (C0, n0, m0),
+        (swap(qc), swap(kc), swap(vc), swap(ic), swap(fc), swap(lw), swap(cumf)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H * hd)
+    y = og * y.astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["proj"])
+
+
+def mlstm_decode_step(p, x: Array, cache, cfg: ArchConfig):
+    """x: [B,1,D]; cache = (C [B,H,hd,hd], n [B,H,hd], m [B,H])."""
+    B = x.shape[0]
+    _, H, hd = xlstm_dims(cfg)
+    C, n, m = cache
+    xt = x[:, 0]
+    q = jnp.einsum("bd,de->be", xt, p["wq"]).reshape(B, H, hd)
+    k = (jnp.einsum("bd,de->be", xt, p["wk"]) / jnp.sqrt(jnp.float32(hd)).astype(x.dtype)).reshape(B, H, hd)
+    v = jnp.einsum("bd,de->be", xt, p["wv"]).reshape(B, H, hd)
+    ig = jnp.einsum("bd,dh->bh", xt.astype(jnp.float32), p["wi"])
+    fg = jax.nn.log_sigmoid(jnp.einsum("bd,dh->bh", xt.astype(jnp.float32), p["wf"]))
+    og = jax.nn.sigmoid(jnp.einsum("bd,de->be", xt, p["wo"]))
+
+    m_new = jnp.maximum(fg + m, ig)
+    wf = jnp.exp(fg + m - m_new)
+    wi = jnp.exp(ig - m_new)
+    C = C * wf[..., None, None] + wi[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = n * wf[..., None] + wi[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)), jnp.exp(-m_new)
+    )
+    y = (num / den[..., None]).reshape(B, H * hd)
+    y = og * y.astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    return jnp.einsum("be,ed->bd", y, p["proj"])[:, None], (C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_step(p, state, xt: Array, cfg: ArchConfig):
+    """One timestep. state = (c, n, m, h) each [B, D] (m,c,n fp32)."""
+    B = xt.shape[0]
+    D, H, hd = xlstm_dims(cfg)
+    c, n, m, h = state
+    hb = h.reshape(B, H, hd)
+
+    def rec(w):  # block-diag recurrence
+        return jnp.einsum("bhp,hpq->bhq", hb.astype(w.dtype), w).reshape(B, D)
+
+    z = jnp.tanh(jnp.einsum("bd,de->be", xt, p["wz"]) + rec(p["rz"]))
+    i_log = jnp.einsum("bd,de->be", xt.astype(jnp.float32), p["wi"]) + rec(p["ri"])
+    f_log = jax.nn.log_sigmoid(
+        jnp.einsum("bd,de->be", xt.astype(jnp.float32), p["wf"]) + rec(p["rf"])
+    )
+    o = jax.nn.sigmoid(jnp.einsum("bd,de->be", xt, p["wo"]) + rec(p["ro"]))
+    m_new = jnp.maximum(f_log + m, i_log)
+    ip = jnp.exp(i_log - m_new)
+    fp = jnp.exp(f_log + m - m_new)
+    c_new = fp * c + ip * z.astype(jnp.float32)
+    n_new = fp * n + ip
+    h_new = (o * (c_new / jnp.maximum(n_new, 1.0)).astype(o.dtype))
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(p, x: Array, cfg: ArchConfig) -> Array:
+    B, S, D = x.shape
+    state0 = (
+        jnp.zeros((B, D), jnp.float32),
+        jnp.zeros((B, D), jnp.float32),
+        jnp.full((B, D), -1e30, jnp.float32),
+        jnp.zeros((B, D), x.dtype),
+    )
+    _, hs = jax.lax.scan(
+        lambda s, xt: slstm_step(p, s, xt, cfg), state0, jnp.moveaxis(x, 1, 0)
+    )
+    y = jnp.moveaxis(hs, 0, 1)  # [B, S, D]
+    y = rms_norm(y, p["norm"])
+    return jnp.einsum("bse,ed->bsd", y, p["proj"])
+
+
+def slstm_decode_step(p, x: Array, cache, cfg: ArchConfig):
+    """x: [B,1,D]; cache = (c, n, m, h)."""
+    state, h_new = slstm_step(p, cache, x[:, 0], cfg)
+    y = rms_norm(h_new, p["norm"])
+    return jnp.einsum("be,ed->bd", y, p["proj"])[:, None], state

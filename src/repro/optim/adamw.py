@@ -1,0 +1,82 @@
+"""Minimal AdamW with dtype-configurable moments (ZeRO-friendly).
+
+Moments can be kept in bf16 for very large models (llama4-maverick) so the
+optimizer state fits the per-chip HBM budget — recorded in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32  # bf16 for >100B models
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def init_specs(cfg: AdamWConfig, param_specs: Any) -> AdamWState:
+    """ShapeDtypeStruct version for dry-run lowering (no allocation)."""
+    spec = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(spec, param_specs),
+        v=jax.tree.map(spec, param_specs),
+    )
+
+
+def apply(
+    cfg: AdamWConfig, params: Any, grads: Any, state: AdamWState
+) -> tuple[Any, AdamWState, jax.Array]:
+    """-> (new_params, new_state, grad_norm). Params keep their dtype."""
+    gflat = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gflat))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+
+    step = state.step + 1
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        p_new = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    # unzip the 3-tuples
+    p_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return p_new, AdamWState(step=step, m=m_new, v=v_new), gnorm

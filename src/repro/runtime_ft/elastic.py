@@ -1,0 +1,45 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+When the supervisor evicts a straggler/dead host (or capacity grows), the
+job restarts on a new mesh.  The checkpoint is mesh-agnostic (full logical
+arrays, see checkpoint/manager.py); this module recomputes shardings for
+the new mesh and re-places state.  ``plan_new_mesh`` picks the largest
+axis-consistent mesh that fits the surviving chip count.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ArchConfig
+from ..dist import sharding as shd
+
+
+def plan_new_mesh(n_chips: int, *, model_parallel: int = 16) -> Tuple[int, int]:
+    """-> (data, model) shape using as many surviving chips as possible while
+    keeping the model axis intact (TP degree is a property of the weights'
+    layout; shrinking it would change per-op shapes)."""
+    if n_chips < model_parallel:
+        raise ValueError(
+            f"cannot keep model_parallel={model_parallel} with {n_chips} chips"
+        )
+    data = n_chips // model_parallel
+    return data, model_parallel
+
+
+def reshard_state(
+    cfg: ArchConfig,
+    ckpt: CheckpointManager,
+    step: int,
+    like: Any,
+    new_mesh,
+) -> Any:
+    """Restore checkpoint ``step`` placed for ``new_mesh``."""
+    from ..models.api import family_for
+
+    p_specs = family_for(cfg).param_specs(cfg)
+    shardings = shd.param_shardings(cfg, new_mesh, p_specs)
+    return ckpt.restore(step, like=like, shardings=shardings)

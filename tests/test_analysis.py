@@ -1,0 +1,76 @@
+"""Roofline-analysis machinery tests."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.corrections import scan_correction_flops
+from repro.analysis.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    build_roofline,
+    collective_bytes,
+    model_flops,
+)
+from repro.configs.base import DECODE_32K, PREFILL_32K, TRAIN_4K
+from repro.configs.registry import get
+from repro.models.api import active_params, count_params
+
+
+def test_collective_parser_async_pairs_counted_once():
+    hlo = """
+  %p0 = bf16[256,512]{1,0} parameter(0)
+  %ar-start = bf16[256,512]{1,0} all-reduce-start(%p0), channel_id=1
+  %ar-done = bf16[256,512]{1,0} all-reduce-done(%ar-start)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 256 * 512 * 2  # start counted, done not
+
+
+def test_collective_parser_tuple_allreduce():
+    hlo = """
+  %a = f32[16,16]{1,0} parameter(0)
+  %b = f32[8]{0} parameter(1)
+  %ar = (f32[16,16]{1,0}, f32[8]{0}) all-reduce(%a, %b), channel_id=3
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == (16 * 16 + 8) * 4
+
+
+def test_model_flops_shapes():
+    cfg = get("stablelm-3b")
+    n = active_params(cfg)
+    t = model_flops(cfg, TRAIN_4K, n)
+    p = model_flops(cfg, PREFILL_32K, n)
+    d = model_flops(cfg, DECODE_32K, n)
+    assert t == 6.0 * n * 256 * 4096
+    assert p == 2.0 * n * 32 * 32768
+    assert d == 2.0 * n * 128
+
+
+def test_moe_active_params_smaller():
+    cfg = get("llama4-maverick-400b-a17b")
+    total = count_params(cfg)
+    act = active_params(cfg)
+    assert total > 300e9  # ~400B-class
+    assert act < 0.1 * total  # top-1 of 128 experts
+
+
+def test_corrections_zero_for_decode_and_short_seq():
+    cfg = get("starcoder2-7b")
+    assert scan_correction_flops(cfg, DECODE_32K) == 0.0
+    assert scan_correction_flops(cfg, TRAIN_4K) > 0.0
+
+
+def test_build_roofline_terms():
+    rl = build_roofline(
+        arch="x", shape="train_4k", mesh_name="m", chips=256,
+        cost={"flops": 1e12, "bytes accessed": 1e9},
+        hlo_text="%ar = f32[1000]{0} all-reduce(%ar)",
+        model_flops_global=2.56e14,
+    )
+    assert abs(rl.t_compute - 1e12 / PEAK_FLOPS) < 1e-12
+    assert abs(rl.t_memory - 1e9 / HBM_BW) < 1e-12
+    assert rl.t_collective > 0
+    assert rl.bottleneck in ("compute", "memory", "collective")
+    assert 0 < rl.useful_flops_ratio <= 1.1

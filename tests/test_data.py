@@ -1,0 +1,62 @@
+"""Data pipeline + booleanizer tests (incl. hypothesis properties)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.booleanize import Booleanizer, booleanize_images
+from repro.data.pipeline import (
+    TM_DATASETS,
+    TokenStream,
+    TokenStreamConfig,
+    booleanized_tm_dataset,
+    make_tm_dataset,
+)
+
+
+def test_stream_deterministic():
+    cfg = TokenStreamConfig(vocab=100, seq_len=8, global_batch=2, seed=9)
+    a = TokenStream(cfg).next_batch()["tokens"]
+    b = TokenStream(cfg).next_batch()["tokens"]
+    assert np.array_equal(a, b)
+    assert a.max() < 100 and a.min() >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(2, 6),
+    st.integers(10, 200),
+    st.integers(1, 8),
+)
+def test_booleanizer_properties(n_feat, n, bits):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, n_feat)).astype(np.float32)
+    b = Booleanizer.fit(x, bits=bits)
+    out = b.transform(x)
+    assert out.shape == (n, n_feat * bits)
+    assert set(np.unique(out)).issubset({0, 1})
+    # thermometer monotonicity: higher bit set => all lower bits set
+    th = out.reshape(n, n_feat, bits)
+    for k in range(1, bits):
+        assert np.all(th[:, :, k] <= th[:, :, k - 1])
+
+
+def test_booleanize_images():
+    img = np.linspace(0, 1, 16).reshape(4, 4)
+    out = booleanize_images(img[None], threshold=0.5)
+    assert out.sum() == (img > 0.5).sum()
+
+
+def test_tm_datasets_shapes():
+    for name, spec in TM_DATASETS.items():
+        x, y = make_tm_dataset(spec, 50, seed=1)
+        assert x.shape == (50, spec.n_raw_features)
+        assert y.max() < spec.n_classes
+        xb, yb, booler = booleanized_tm_dataset(spec, 50, seed=1)
+        assert xb.shape == (50, spec.n_raw_features * spec.thermometer_bits)
+
+
+def test_drift_changes_distribution():
+    spec = TM_DATASETS["gas"]
+    x0, _ = make_tm_dataset(spec, 500, seed=2, drift=0.0)
+    x1, _ = make_tm_dataset(spec, 500, seed=2, drift=1.0)
+    assert not np.allclose(x0, x1)

@@ -1,0 +1,151 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
+against the pure-jnp ref oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TMConfig, batch_class_sums, pack_literals
+from repro.core.compress import encode, decode_to_plan
+from repro.kernels.clause_eval.kernel import clause_eval
+from repro.kernels.clause_eval.ops import tm_dense_class_sums
+from repro.kernels.clause_eval.ref import clause_eval_ref
+from repro.kernels.tm_interp.kernel import tm_interp
+from repro.kernels.tm_interp.ops import (
+    pack_interleaved_literals,
+    plan_to_operands,
+    tm_compressed_class_sums,
+)
+from repro.kernels.tm_interp.ref import tm_interp_ref
+
+rng = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize(
+    "nc,l2,w,bc,bw",
+    [
+        (8, 16, 1, 8, 1),
+        (100, 64, 3, 32, 2),
+        (256, 128, 8, 64, 4),
+        (33, 30, 2, 16, 2),  # non-divisible padding path
+        (5, 8, 1, 128, 8),  # block bigger than data
+    ],
+)
+def test_clause_eval_shapes(nc, l2, w, bc, bw):
+    actions = (rng.random((nc, l2)) < 0.15).astype(np.int32)
+    lits = rng.integers(0, 2**32, (l2, w), dtype=np.uint32)
+    out_k = clause_eval(
+        jnp.asarray(actions), jnp.asarray(lits),
+        block_clauses=bc, block_words=bw, interpret=True,
+    )
+    out_r = clause_eval_ref(jnp.asarray(actions), jnp.asarray(lits))
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+def test_clause_eval_empty_clause_is_zero():
+    actions = np.zeros((4, 16), np.int32)
+    lits = np.full((16, 2), 0xFFFFFFFF, np.uint32)
+    out = clause_eval(jnp.asarray(actions), jnp.asarray(lits), interpret=True)
+    assert (np.asarray(out) == 0).all()
+
+
+def test_dense_kernel_full_pipeline_vs_oracle():
+    cfg = TMConfig(n_classes=6, n_clauses=16, n_features=40)
+    acts = rng.random((6, 16, 80)) < 0.1
+    X = rng.integers(0, 2, (96, 40)).astype(np.uint8)
+    state = jnp.where(jnp.asarray(acts), cfg.n_states + 1, cfg.n_states)
+    oracle = np.asarray(batch_class_sums(cfg, state, jnp.asarray(X)))
+    sums = np.asarray(
+        tm_dense_class_sums(
+            jnp.asarray(acts).astype(jnp.int32), pack_literals(jnp.asarray(X)),
+            n_classes=6, interpret=True,
+        )
+    )
+    assert (sums.T[:96] == oracle).all()
+
+
+@pytest.mark.parametrize(
+    "M,C,F,B,bi,bw",
+    [
+        (4, 12, 25, 64, 64, 1),
+        (3, 8, 100, 32, 128, 1),
+        (6, 20, 60, 128, 256, 2),
+        (2, 4, 10, 96, 32, 4),  # word blocking
+    ],
+)
+def test_tm_interp_kernel_vs_oracle(M, C, F, B, bi, bw):
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = rng.random((M, C, 2 * F)) < 0.08
+    X = rng.integers(0, 2, (B, F)).astype(np.uint8)
+    state = jnp.where(jnp.asarray(acts), cfg.n_states + 1, cfg.n_states)
+    oracle = np.asarray(batch_class_sums(cfg, state, jnp.asarray(X)))
+    plan = decode_to_plan(encode(cfg, np.asarray(acts)))
+    lits = pack_interleaved_literals(jnp.asarray(X))
+    i_cap = max(bi, -(-plan.n_includes // bi) * bi)
+    sums = np.asarray(
+        tm_interp(
+            *(jnp.asarray(a) for a in plan_to_operands(plan, i_cap)),
+            lits, m_cap=8, block_instructions=bi, block_words=bw,
+            interpret=True,
+        )
+    )
+    assert (sums[:M, :B].T == oracle).all()
+
+
+def test_tm_interp_kernel_vs_ref_module():
+    """Kernel vs its own ref.py oracle on raw operands."""
+    I, L2, W, M = 256, 64, 2, 8
+    lit_idx = rng.integers(0, L2, I).astype(np.int32)
+    last = (rng.random(I) < 0.2).astype(np.int32)
+    last[-1] = 1
+    pol = np.where(rng.random(I) < 0.5, 1, -1).astype(np.int32)
+    cls = np.sort(rng.integers(0, M, I)).astype(np.int32)
+    lits = rng.integers(0, 2**32, (L2, W), dtype=np.uint32)
+    args = tuple(jnp.asarray(a) for a in (lit_idx, last, pol, cls))
+    out_k = tm_interp(*args, jnp.asarray(lits), m_cap=M,
+                      block_instructions=64, block_words=1, interpret=True)
+    out_r = tm_interp_ref(*args, jnp.asarray(lits), m_cap=M)
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+@pytest.mark.parametrize(
+    "nc,l2,b,bc,bb,bk",
+    [
+        (8, 16, 32, 8, 16, 8),
+        (100, 64, 96, 32, 32, 32),
+        (256, 200, 128, 128, 128, 128),
+        (33, 30, 40, 16, 16, 16),  # padding on every dim
+    ],
+)
+def test_clause_matmul_kernel(nc, l2, b, bc, bb, bk):
+    """MXU-formulated clause eval (kernels/clause_matmul) vs its ref."""
+    from repro.kernels.clause_matmul.kernel import clause_matmul
+    from repro.kernels.clause_matmul.ref import clause_matmul_ref
+
+    actions = (rng.random((nc, l2)) < 0.15).astype(np.int32)
+    lits = rng.integers(0, 2, (l2, b)).astype(np.int32)
+    out_k = clause_matmul(
+        jnp.asarray(actions), jnp.asarray(lits),
+        block_c=bc, block_b=bb, block_k=bk, interpret=True,
+    )
+    out_r = clause_matmul_ref(jnp.asarray(actions), jnp.asarray(lits))
+    assert (np.asarray(out_k) == np.asarray(out_r).astype(np.int32)).all()
+
+
+def test_clause_matmul_full_pipeline():
+    from repro.kernels.clause_matmul.ops import tm_matmul_class_sums
+
+    cfg = TMConfig(n_classes=5, n_clauses=14, n_features=33)
+    acts = rng.random((5, 14, 66)) < 0.1
+    X = rng.integers(0, 2, (48, 33)).astype(np.uint8)
+    state = jnp.where(jnp.asarray(acts), cfg.n_states + 1, cfg.n_states)
+    oracle = np.asarray(batch_class_sums(cfg, state, jnp.asarray(X)))
+    lits = np.stack([X, 1 - X], -1).reshape(48, -1).T.astype(np.int32)
+    sums = np.asarray(
+        tm_matmul_class_sums(
+            jnp.asarray(acts).astype(jnp.int32), jnp.asarray(lits),
+            n_classes=5, interpret=True,
+        )
+    )
+    assert (sums[:, :48].T == oracle).all()

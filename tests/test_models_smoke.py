@@ -1,0 +1,105 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same family
+runs one forward/train step + prefill + decode on CPU, asserting output
+shapes and finiteness (the FULL configs are exercised by the dry-run only).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import all_arch_names, get
+from repro.dist.steps import make_train_step, opt_config_for
+from repro.models.api import active_params, count_params, family_for
+from repro.optim import adamw
+
+rng = np.random.default_rng(0)
+
+
+def _batch_for(cfg, fam, shape):
+    out = {}
+    for k, s in fam.input_specs(cfg, shape).items():
+        if k in ("tokens", "token"):
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, s.shape), jnp.int32)
+        elif k == "pos":
+            out[k] = jnp.int32(0)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=s.shape), s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_train_step_smoke(arch):
+    cfg = get(arch + "-smoke")
+    fam = family_for(cfg)
+    params = fam.init_params(cfg, jax.random.key(0))
+    opt_cfg = opt_config_for(cfg)
+    opt_state = adamw.init(opt_cfg, params)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = _batch_for(cfg, fam, ShapeSpec("t", 64, 2, "train"))
+    params2, opt2, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_prefill_decode_smoke(arch):
+    cfg = get(arch + "-smoke")
+    fam = family_for(cfg)
+    params = fam.init_params(cfg, jax.random.key(1))
+    B, S = 2, 64
+    batch = _batch_for(cfg, fam, ShapeSpec("p", S, B, "prefill"))
+    logits, cache = jax.jit(lambda p, b: fam.prefill(cfg, p, b))(params, batch)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    dec = {
+        "token": jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32),
+        "pos": jnp.int32(S - 1),
+    }
+    logits2, cache2 = jax.jit(lambda p, c, b: fam.decode(cfg, p, c, b))(
+        params, cache, dec
+    )
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_full_config_dims(arch):
+    """Exact assigned dims are wired through (no allocation: specs only)."""
+    cfg = get(arch)
+    fam = family_for(cfg)
+    specs = fam.param_specs(cfg)
+    n = count_params(cfg)
+    assert n > 0
+    if cfg.is_moe:
+        assert active_params(cfg) < n
+    # vocab padding never shrinks
+    assert cfg.padded_vocab >= cfg.vocab
+
+
+def test_loss_decreases_on_tiny_training():
+    """End-to-end: 30 steps of the real train step reduce loss on the
+    structured synthetic stream."""
+    from repro.data.pipeline import TokenStream, TokenStreamConfig
+
+    cfg = get("stablelm-3b-smoke")
+    fam = family_for(cfg)
+    params = fam.init_params(cfg, jax.random.key(0))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3)
+    opt_state = adamw.init(opt_cfg, params)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    stream = TokenStream(TokenStreamConfig(cfg.vocab, 64, 16, seed=1))
+    losses = []
+    for _ in range(60):
+        batch = {"tokens": jnp.asarray(stream.next_batch()["tokens"])}
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    # measured headroom ~1.8 nats over 60 steps; assert half of it
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.9, losses

@@ -1,0 +1,99 @@
+"""Stream protocol + Accelerator: the paper's runtime tunability claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import TMConfig, batch_class_sums, init_state
+from repro.core.compress import encode
+from repro.core.runtime import (
+    Accelerator,
+    AcceleratorConfig,
+    MultiCoreAccelerator,
+    build_feature_stream,
+    build_instruction_stream,
+    parse_header,
+)
+
+import jax.numpy as jnp
+
+
+def _random_model(rng, M, C, F, density=0.05):
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = rng.random((M, C, 2 * F)) < density
+    return cfg, acts
+
+
+def _dense_sums(cfg, acts, X):
+    state = jnp.where(jnp.asarray(acts), cfg.n_states + 1, cfg.n_states)
+    return np.asarray(batch_class_sums(cfg, state, jnp.asarray(X)))
+
+
+@pytest.fixture
+def acc():
+    return Accelerator(AcceleratorConfig(
+        instruction_capacity=4096, feature_capacity=256, class_capacity=16,
+        batch_words=1,
+    ))
+
+
+def test_header_roundtrip():
+    rng = np.random.default_rng(0)
+    cfg, acts = _random_model(rng, 4, 10, 50)
+    stream = build_instruction_stream(encode(cfg, acts))
+    reset, is_instr, payload, w1, count = parse_header(stream)
+    assert reset and is_instr and payload == 4 and w1 == 10
+
+
+def test_program_and_infer(acc):
+    rng = np.random.default_rng(1)
+    cfg, acts = _random_model(rng, 4, 10, 50)
+    X = rng.integers(0, 2, (32, 50)).astype(np.uint8)
+    acc.feed(build_instruction_stream(encode(cfg, acts)))
+    preds = acc.feed(build_feature_stream(X))
+    assert (preds[:32] == _dense_sums(cfg, acts, X).argmax(1)).all()
+
+
+def test_zero_recompile_model_swap(acc):
+    """THE paper claim: model size, task (classes) and input dimensionality
+    all change at runtime with no recompilation (no 'resynthesis')."""
+    rng = np.random.default_rng(2)
+    cases = [(4, 10, 50), (2, 6, 120), (7, 14, 33), (3, 20, 200)]
+    baseline = None
+    for (M, C, F) in cases:
+        cfg, acts = _random_model(rng, M, C, F)
+        X = rng.integers(0, 2, (20, F)).astype(np.uint8)
+        acc.feed(build_instruction_stream(encode(cfg, acts)))
+        preds = acc.feed(build_feature_stream(X))
+        assert (preds[:20] == _dense_sums(cfg, acts, X).argmax(1)).all(), (M, C, F)
+        if baseline is None:
+            baseline = acc.compile_cache_size()
+        else:
+            assert acc.compile_cache_size() == baseline, "re-jit on model swap!"
+    assert acc.programs_loaded == len(cases)
+
+
+def test_capacity_guard(acc):
+    rng = np.random.default_rng(3)
+    cfg, acts = _random_model(rng, 4, 10, 50, density=0.9)  # too many includes
+    with pytest.raises(ValueError, match="capacity"):
+        big_cfg, big_acts = _random_model(rng, 8, 200, 500, density=0.5)
+        acc.feed(build_instruction_stream(encode(big_cfg, big_acts)))
+
+
+def test_feature_capacity_guard(acc):
+    rng = np.random.default_rng(4)
+    X = rng.integers(0, 2, (8, 1000)).astype(np.uint8)
+    with pytest.raises(ValueError, match="dimensionality"):
+        acc.feed(build_feature_stream(X))
+
+
+def test_multicore_matches_single():
+    rng = np.random.default_rng(5)
+    cfg, acts = _random_model(rng, 9, 12, 40)
+    X = rng.integers(0, 2, (32, 40)).astype(np.uint8)
+    mc = MultiCoreAccelerator(4, AcceleratorConfig(
+        instruction_capacity=4096, feature_capacity=64, class_capacity=16,
+        batch_words=1,
+    ))
+    mc.load_model(encode(cfg, acts))
+    assert (mc.infer(X) == _dense_sums(cfg, acts, X).argmax(1)).all()

@@ -1,0 +1,87 @@
+"""Behaviour tests for the Tsetlin Machine core (paper §2, Fig 2/3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    TMConfig,
+    accuracy,
+    batch_class_sums,
+    fit,
+    include_actions,
+    init_state,
+    pack_literals,
+    packed_class_sums,
+    predict,
+)
+
+
+@pytest.fixture(scope="module")
+def xor_model():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 2, size=(1500, 8)).astype(np.uint8)
+    y = (X[:, 0] ^ X[:, 1]).astype(np.int32)
+    cfg = TMConfig(n_classes=2, n_clauses=20, n_features=8, n_states=100)
+    state = init_state(cfg, jax.random.key(0))
+    state = fit(cfg, state, jax.random.key(1), jnp.asarray(X), jnp.asarray(y),
+                epochs=15, batch=250)
+    return cfg, state
+
+
+def test_xor_convergence(xor_model):
+    cfg, state = xor_model
+    rng = np.random.default_rng(7)
+    Xt = rng.integers(0, 2, size=(512, 8)).astype(np.uint8)
+    yt = (Xt[:, 0] ^ Xt[:, 1]).astype(np.int32)
+    acc = accuracy(cfg, state, jnp.asarray(Xt), jnp.asarray(yt))
+    assert acc > 0.95, f"TM failed to learn XOR: {acc}"
+
+
+def test_model_is_sparse_after_training(xor_model):
+    """The premise of the paper: includes are a small minority."""
+    cfg, state = xor_model
+    frac = float(include_actions(cfg, state).mean())
+    assert frac < 0.5
+
+
+def test_packed_equals_dense(xor_model):
+    cfg, state = xor_model
+    rng = np.random.default_rng(3)
+    X = rng.integers(0, 2, size=(64, 8)).astype(np.uint8)
+    dense = batch_class_sums(cfg, state, jnp.asarray(X))
+    packed = packed_class_sums(cfg, state, pack_literals(jnp.asarray(X)))
+    assert jnp.array_equal(dense, packed[:64])
+
+
+def test_predict_shape_and_range(xor_model):
+    cfg, state = xor_model
+    X = np.zeros((16, 8), np.uint8)
+    p = predict(cfg, state, jnp.asarray(X))
+    assert p.shape == (16,)
+    assert bool(jnp.all((p >= 0) & (p < cfg.n_classes)))
+
+
+def test_empty_clause_semantics():
+    """All-exclude model: inference sums must be exactly zero."""
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=5)
+    state = init_state(cfg, jax.random.key(0))  # all at N -> all exclude
+    X = np.ones((4, 5), np.uint8)
+    sums = batch_class_sums(cfg, state, jnp.asarray(X))
+    assert bool(jnp.all(sums == 0))
+
+
+def test_parallel_training_learns_xor():
+    """Summed-delta batch-parallel trainer (arXiv:2009.04861-style) reaches
+    the same XOR accuracy as the online trainer."""
+    rng = np.random.default_rng(1)
+    X = rng.integers(0, 2, size=(1500, 8)).astype(np.uint8)
+    y = (X[:, 0] ^ X[:, 1]).astype(np.int32)
+    cfg = TMConfig(n_classes=2, n_clauses=20, n_features=8, n_states=100)
+    state = init_state(cfg, jax.random.key(0))
+    state = fit(cfg, state, jax.random.key(1), jnp.asarray(X), jnp.asarray(y),
+                epochs=15, batch=250, parallel=True)
+    Xt = rng.integers(0, 2, size=(512, 8)).astype(np.uint8)
+    yt = (Xt[:, 0] ^ Xt[:, 1]).astype(np.int32)
+    assert accuracy(cfg, state, jnp.asarray(Xt), jnp.asarray(yt)) > 0.95
