@@ -1,0 +1,13 @@
+"""Mesh-sharded execution: activation/param sharding rules, jitted step
+builders, and the paper's multi-core compressed-TM executor on a mesh.
+
+Modules:
+  sharding.py    activation-sharding hints + per-family parameter sharding
+                 rules (the single source of truth for mesh layouts)
+  steps.py       make_train_step / make_prefill_step / make_decode_step —
+                 the jittable programs the launchers and dry-run lower
+  tm_sharded.py  class-parallel x batch-parallel compressed-TM executor
+                 (the Fig-7 multi-core split, mesh-native)
+"""
+
+from . import sharding  # noqa: F401

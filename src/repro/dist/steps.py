@@ -1,0 +1,99 @@
+"""Jittable step builders shared by the launchers, the dry-run and tests.
+
+``make_train_step`` supports gradient-accumulation microbatching (the
+activation-memory knob recorded per-arch in configs as
+``train_microbatches``): the global batch is split on its leading dim and
+scanned, grads accumulated in fp32, then one AdamW update is applied.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import family_for
+from ..optim import adamw
+
+
+def opt_config_for(cfg) -> adamw.AdamWConfig:
+    """Per-arch optimizer config (moment dtype follows the HBM budget)."""
+    moment_dtype = (
+        jnp.bfloat16 if getattr(cfg, "moment_dtype", "float32") == "bfloat16"
+        else jnp.float32
+    )
+    return adamw.AdamWConfig(moment_dtype=moment_dtype)
+
+
+def make_train_step(
+    cfg, opt_cfg: adamw.AdamWConfig, *, microbatches: int = 1
+) -> Callable:
+    """-> step(params, opt_state, batch) -> (params, opt_state, metrics)
+    with metrics = {"loss", "grad_norm"}."""
+    fam = family_for(cfg)
+
+    def loss_fn(params, batch):
+        return fam.loss(cfg, params, batch)
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (
+                    f"global batch {B} not divisible by "
+                    f"train_microbatches={microbatches}"
+                )
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, b):
+                loss_acc, g_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), g_acc, g
+                )
+                return (loss_acc + loss.astype(jnp.float32), g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss_sum, g_sum), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), g0), mb
+            )
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, gnorm = adamw.apply(
+            opt_cfg, params, grads, opt_state
+        )
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_prefill_step(cfg) -> Callable:
+    """-> step(params, batch) -> (last-position logits, kv cache)."""
+    fam = family_for(cfg)
+
+    def step(params, batch):
+        return fam.prefill(cfg, params, batch)
+
+    return step
+
+
+def make_decode_step(cfg) -> Callable:
+    """-> step(params, cache, batch) -> (greedy token int32[B], cache).
+
+    Greedy sampling lives inside the compiled program so the serving loop
+    moves one int per sequence per step off-device, not the logits.
+    """
+    fam = family_for(cfg)
+
+    def step(params, cache, batch):
+        logits, cache = fam.decode(cfg, params, cache, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return step

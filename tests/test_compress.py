@@ -5,6 +5,9 @@ compressed stream reproduces dense TM inference EXACTLY."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import TMConfig, batch_class_sums

@@ -1,6 +1,9 @@
 """Data pipeline + booleanizer tests (incl. hypothesis properties)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.booleanize import Booleanizer, booleanize_images
