@@ -13,7 +13,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-ALL = ("table1", "table2", "fig6", "fig9")
+ALL = ("table1", "table2", "fig6", "fig9", "tm_serve")
 
 
 def main() -> None:
@@ -32,6 +32,8 @@ def main() -> None:
             from .fig6_memory import run as r
         elif name == "fig9":
             from .fig9_tradeoff import run as r
+        elif name == "tm_serve":
+            from .tm_serve import run as r
         else:
             print(f"unknown benchmark {name}", file=sys.stderr)
             continue

@@ -1,0 +1,129 @@
+"""Serving-subsystem benchmark: multi-tenant batched throughput + hot-swap
+under traffic, per executor backend.  Emits ``BENCH_tm_serve.json`` (CWD)
+and the harness CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run --only tm_serve
+
+``BENCH_TINY=1`` shrinks capacities and traffic for the CI smoke step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TMConfig, batch_class_sums, state_from_actions
+from repro.core.compress import encode
+from repro.serve_tm import BACKENDS, ServeCapacity, TMServer
+
+OUT_PATH = "BENCH_tm_serve.json"
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_TINY", "0") == "1"
+
+
+def _random_model(rng, M, C, F, density=0.03):
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = rng.random((M, C, 2 * F)) < density
+    return cfg, acts, encode(cfg, acts)
+
+
+def _oracle_preds(cfg, acts, X) -> np.ndarray:
+    return np.asarray(
+        batch_class_sums(cfg, state_from_actions(cfg, acts), jnp.asarray(X))
+    ).argmax(1).astype(np.int32)
+
+
+def _bench_backend(backend: str, capacity: ServeCapacity, tiny: bool) -> dict:
+    rng = np.random.default_rng(7)
+    # tenant A and its recalibrated successor B: different class count AND
+    # feature count (the acceptance-criteria swap)
+    dims_a = (6, 12, 48) if tiny else (10, 24, 96)
+    dims_b = (4, 8, 32) if tiny else (7, 16, 64)
+    cfg_a, acts_a, model_a = _random_model(rng, *dims_a)
+    cfg_b, acts_b, model_b = _random_model(rng, *dims_b)
+    n_requests = 16 if tiny else 64
+    max_rows = 8 if tiny else 24
+
+    server = TMServer(capacity, backend=backend)
+    server.register("tenant", model_a)
+
+    bit_exact = True
+
+    def traffic(cfg, acts, n):
+        nonlocal bit_exact
+        handles = []
+        for _ in range(n):
+            x = rng.integers(
+                0, 2, (int(rng.integers(1, max_rows + 1)), cfg.n_features)
+            ).astype(np.uint8)
+            handles.append((server.submit("tenant", x), cfg, acts, x))
+        server.flush()
+        for h, c, a, x in handles:
+            if not np.array_equal(h.result(), _oracle_preds(c, a, x)):
+                bit_exact = False
+
+    # warm the engine outside the metrics window (first call compiles);
+    # the direct class_sums hook bypasses the queue and records nothing
+    server.class_sums("tenant", np.zeros((1, cfg_a.n_features), np.uint8))
+
+    traffic(cfg_a, acts_a, n_requests)
+    # hot swap mid-traffic: queued rows drain under A, then B installs
+    for _ in range(4):
+        x = rng.integers(0, 2, (5, cfg_a.n_features)).astype(np.uint8)
+        server.submit("tenant", x)
+    server.register("tenant", model_b)
+    traffic(cfg_b, acts_b, n_requests)
+
+    summary = server.metrics.summary()
+    summary["compile_cache_size"] = server.compile_cache_size()
+    summary["bit_exact"] = bit_exact
+    summary["model_a"] = dict(zip(("n_classes", "n_clauses", "n_features"),
+                                  dims_a))
+    summary["model_b"] = dict(zip(("n_classes", "n_clauses", "n_features"),
+                                  dims_b))
+    return summary
+
+
+def run():
+    tiny = _tiny()
+    capacity = ServeCapacity(
+        instruction_capacity=1024 if tiny else 4096,
+        feature_capacity=64 if tiny else 128,
+        class_capacity=16,
+        clause_capacity=32,
+        include_capacity=16 if tiny else 24,
+        batch_words=2 if tiny else 4,
+    )
+    report = {
+        "bench": "tm_serve",
+        "tiny": tiny,
+        "capacity": {
+            "instruction_capacity": capacity.instruction_capacity,
+            "feature_capacity": capacity.feature_capacity,
+            "class_capacity": capacity.class_capacity,
+            "clause_capacity": capacity.clause_capacity,
+            "include_capacity": capacity.include_capacity,
+            "batch_capacity": capacity.batch_capacity,
+        },
+        "backends": {},
+    }
+    rows = []
+    for backend in sorted(BACKENDS):
+        summary = _bench_backend(backend, capacity, tiny)
+        report["backends"][backend] = summary
+        rows.append((
+            f"tm_serve_{backend}",
+            f"{summary['engine_us']['p50']:.1f}",
+            f"dps={summary['throughput_dps']:.0f}"
+            f";fill={summary['fill_ratio']:.2f}"
+            f";cache={summary['compile_cache_size']}"
+            f";exact={int(summary['bit_exact'])}",
+        ))
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    return rows

@@ -1,12 +1,14 @@
-"""The paper's Fig-8 system: on-field recalibration without resynthesis.
+"""The paper's Fig-8 system: on-field recalibration without resynthesis,
+on top of the serving subsystem.
 
-An edge accelerator serves inference while the data distribution DRIFTS
-(sensor aging / environment change — the paper's Gas Sensor Array Drift
-scenario).  A co-located training node (Raspberry-Pi-class; here: the JAX
-TM trainer on CPU) monitors accuracy, retrains on fresh data, and
-reprograms the accelerator over the stream protocol.  The accelerator is
-never recompiled — the model, class count and input dimensionality are all
-runtime state.
+An edge server answers inference traffic while the data distribution
+DRIFTS (sensor aging / environment change — the paper's Gas Sensor Array
+Drift scenario).  A co-located training node (Raspberry-Pi-class; here:
+the JAX TM trainer on CPU) monitors accuracy, retrains on fresh data, and
+hot-swaps the model into the live slot via ``TMServer.register`` — the
+Fig-8 reprogram step as a first-class API.  The engine is never
+recompiled: model, class count and input dimensionality are all runtime
+state, and the loop asserts ``compile_cache_size() == 1`` throughout.
 
 Run:  PYTHONPATH=src python examples/recalibration_loop.py
 """
@@ -17,16 +19,12 @@ import jax.numpy as jnp
 
 from repro.core import TMConfig, fit, include_actions, init_state
 from repro.core.compress import encode
-from repro.core.runtime import (
-    Accelerator,
-    AcceleratorConfig,
-    build_feature_stream,
-    build_instruction_stream,
-)
 from repro.data.pipeline import TM_DATASETS, booleanized_tm_dataset
+from repro.serve_tm import ServeCapacity, TMServer
 
 SPEC = TM_DATASETS["gas"]
-RETRAIN_THRESHOLD = 0.70  # accuracy trigger for the training node
+RETRAIN_THRESHOLD = 0.90  # accuracy trigger for the training node
+SLOT = "edge"
 
 
 def train_node(drift: float, booleanizer, seed: int):
@@ -41,56 +39,46 @@ def train_node(drift: float, booleanizer, seed: int):
     state = init_state(cfg, jax.random.key(seed))
     state = fit(cfg, state, jax.random.key(seed + 1), jnp.asarray(xb),
                 jnp.asarray(y), epochs=8, batch=150)
-    return cfg, state, booler
+    return encode(cfg, np.asarray(include_actions(cfg, state))), booler
 
 
 def main():
-    engine = Accelerator(AcceleratorConfig(
+    server = TMServer(ServeCapacity(
         instruction_capacity=1 << 15, feature_capacity=1 << 11,
-        class_capacity=16, batch_words=1,
-    ))
+        class_capacity=16, clause_capacity=64, include_capacity=64,
+        batch_words=1,
+    ), backend="interp")  # the paper-faithful engine
 
     # initial deployment
-    cfg, state, booler = train_node(drift=0.0, booleanizer=None, seed=0)
-    engine.feed(build_instruction_stream(
-        encode(cfg, np.asarray(include_actions(cfg, state)))
-    ))
-    print("deployed initial model;", engine.programs_loaded, "programs loaded")
+    model, booler = train_node(drift=0.0, booleanizer=None, seed=0)
+    server.register(SLOT, model)
+    print(f"deployed initial model; slot v{server.registry.get(SLOT).version}")
 
-    reprograms = 0
     for epoch, drift in enumerate([0.0, 0.15, 0.3, 0.5, 0.8, 1.2]):
-        # edge sensor data under current drift
+        # edge sensor traffic under current drift — the batcher chunks the
+        # 320 datapoints into engine words; no manual 32-row slicing
         xb, y, _ = booleanized_tm_dataset(
             SPEC, 320, seed=100 + epoch, drift=drift, booleanizer=booler
         )
-        correct = 0
-        for i in range(0, 320, 32):
-            preds = engine.feed(build_feature_stream(xb[i : i + 32]))
-            correct += int((preds[:32] == y[i : i + 32]).sum())
-        acc = correct / 320
+        acc = float((server.infer(SLOT, xb) == y).mean())
         marker = ""
         if acc < RETRAIN_THRESHOLD:
             # the training node retrains on the drifted distribution and
-            # reprograms the accelerator AT RUNTIME (no resynthesis)
-            cfg, state, booler = train_node(drift, booler, seed=200 + epoch)
-            engine.feed(build_instruction_stream(
-                encode(cfg, np.asarray(include_actions(cfg, state)))
-            ))
-            reprograms += 1
+            # hot-swaps the live slot AT RUNTIME (no resynthesis)
+            model, booler = train_node(drift, booler, seed=200 + epoch)
+            server.register(SLOT, model)
             xb2, y2, _ = booleanized_tm_dataset(
                 SPEC, 320, seed=300 + epoch, drift=drift, booleanizer=booler
             )
-            correct = sum(
-                int((engine.feed(build_feature_stream(xb2[i : i + 32]))[:32]
-                     == y2[i : i + 32]).sum())
-                for i in range(0, 320, 32)
-            )
-            marker = f" -> RECALIBRATED, acc {correct / 320:.3f}"
+            acc2 = float((server.infer(SLOT, xb2) == y2).mean())
+            marker = f" -> RECALIBRATED, acc {acc2:.3f}"
         print(f"drift {drift:4.2f}: accuracy {acc:.3f}{marker}")
 
+    s = server.metrics.summary()
     print(
-        f"\n{reprograms} runtime reprograms, "
-        f"{engine.compile_cache_size()} compiled program(s) total "
+        f"\n{s['swaps'] - 1} runtime reprograms over {s['batches']} engine "
+        f"batches ({s['throughput_dps']:.0f} datapoints/s), "
+        f"{server.compile_cache_size()} compiled program(s) total "
         f"(the accelerator was never resynthesized)"
     )
 

@@ -16,6 +16,7 @@ from .tm import (
     TMConfig,
     init_state,
     include_actions,
+    state_from_actions,
     literals,
     clause_outputs,
     clause_polarities,
@@ -34,6 +35,7 @@ __all__ = [
     "TMConfig",
     "init_state",
     "include_actions",
+    "state_from_actions",
     "literals",
     "clause_outputs",
     "clause_polarities",

@@ -40,6 +40,17 @@ def pack_features(x: Array, n_feature_cap: int, n_word_cap: int) -> Array:
     datapoint w*32+b).  B must be <= 32*W_cap; F <= F_cap."""
     x = x.astype(jnp.uint32)
     B, F = x.shape
+    if F > n_feature_cap:
+        raise ValueError(
+            f"input dimensionality F={F} exceeds feature capacity "
+            f"{n_feature_cap}; resynthesize with a larger feature_capacity"
+        )
+    if B > 32 * n_word_cap:
+        raise ValueError(
+            f"batch B={B} exceeds the {32 * n_word_cap} datapoints of "
+            f"batch_words={n_word_cap}; stream in chunks or resynthesize "
+            f"with more batch_words"
+        )
     W = (B + 31) // 32
     pad_b = W * 32 - B
     xp = jnp.pad(x, ((0, pad_b), (0, n_feature_cap - F)))  # [W*32, F_cap]

@@ -44,12 +44,32 @@ PAYLOAD_MASK = 0x3FFF
 # ---------------------------------------------------------------------------
 
 def build_instruction_stream(model: CompressedModel) -> np.ndarray:
-    """CompressedModel -> uint16 stream (header + instruction payload)."""
+    """CompressedModel -> uint16 stream (header + instruction payload).
+
+    Raises ValueError when a header field does not fit its wire width
+    (14-bit class payload, 16-bit clause count, 32-bit instruction count)
+    rather than silently wrapping into a corrupt-but-parseable header.
+    """
     n = model.n_instructions
+    if model.n_classes > PAYLOAD_MASK:
+        raise ValueError(
+            f"n_classes={model.n_classes} does not fit the 14-bit header "
+            f"payload (max {PAYLOAD_MASK})"
+        )
+    if model.n_clauses > 0xFFFF:
+        raise ValueError(
+            f"n_clauses={model.n_clauses} does not fit header word1 "
+            f"(max {0xFFFF})"
+        )
+    if n > 0xFFFFFFFF:
+        raise ValueError(
+            f"n_instructions={n} does not fit the 32-bit count field "
+            f"(max {0xFFFFFFFF})"
+        )
     header = np.array(
         [
-            (1 << RESET_BIT) | (1 << TYPE_BIT) | (model.n_classes & PAYLOAD_MASK),
-            model.n_clauses & 0xFFFF,
+            (1 << RESET_BIT) | (1 << TYPE_BIT) | model.n_classes,
+            model.n_clauses,
             n & 0xFFFF,
             (n >> 16) & 0xFFFF,
         ],
@@ -65,6 +85,16 @@ def build_feature_stream(x: np.ndarray) -> np.ndarray:
     (the paper's "Inference data packets")."""
     x = np.asarray(x, dtype=np.uint16)
     B, F = x.shape
+    if F > PAYLOAD_MASK:
+        raise ValueError(
+            f"n_features={F} does not fit the 14-bit header payload "
+            f"(max {PAYLOAD_MASK})"
+        )
+    if B > 0xFFFF:
+        raise ValueError(
+            f"n_datapoints={B} does not fit header word1 (max {0xFFFF}); "
+            f"stream in chunks"
+        )
     wpd = (F + 15) // 16  # words per datapoint
     padded = np.zeros((B, wpd * 16), dtype=np.uint16)
     padded[:, :F] = x
@@ -77,8 +107,8 @@ def build_feature_stream(x: np.ndarray) -> np.ndarray:
     nw = B * wpd
     header = np.array(
         [
-            (1 << RESET_BIT) | (F & PAYLOAD_MASK),
-            B & 0xFFFF,
+            (1 << RESET_BIT) | F,
+            B,
             nw & 0xFFFF,
             (nw >> 16) & 0xFFFF,
         ],
@@ -254,6 +284,11 @@ class MultiCoreAccelerator:
             core.load_model(encode(sub_cfg, acts[lo:hi]))
 
     def infer(self, x: np.ndarray) -> np.ndarray:
+        if not self._class_slices:
+            raise RuntimeError(
+                "no model loaded: call MultiCoreAccelerator.load_model() "
+                "before infer()"
+            )
         all_sums = []
         for core, (lo, hi) in zip(self.cores, self._class_slices):
             if lo >= hi:

@@ -55,6 +55,14 @@ def include_actions(cfg: TMConfig, state: Array) -> Array:
     return state > cfg.n_states
 
 
+def state_from_actions(cfg: TMConfig, actions) -> Array:
+    """Minimal TA state tensor realizing the given include mask — the
+    inverse of ``include_actions`` (tests/benches build models straight
+    from action masks with it)."""
+    a = jnp.asarray(actions, dtype=jnp.bool_)
+    return jnp.where(a, cfg.n_states + 1, cfg.n_states).astype(jnp.int32)
+
+
 def literals(x: Array) -> Array:
     """Boolean features -> interleaved literals.
 

@@ -256,18 +256,16 @@ def build_tm_sharded(cfg: TMShardedConfig, mesh) -> Tuple[Callable, tuple]:
     return fn, specs
 
 
-def operands_from_plan(cfg: TMShardedConfig, plan, X: np.ndarray, mesh):
-    """DecodedPlan + raw features -> real operands matching build_tm_sharded.
+def fill_clause_tables(plan, Mp: int, C: int, Lc: int, F2: int):
+    """DecodedPlan -> clause-major (idx int32[Mp, C, Lc], pol int32[Mp, C]).
 
-    Raises if the plan exceeds the config's capacity plan (the mesh analog
-    of "resynthesize with a bigger AcceleratorConfig").
+    Padded idx entries point at the all-ones literal column ``F2``; padded
+    pol entries are 0 so they contribute nothing.  Raises when the plan
+    exceeds the (C, Lc) capacity plan (the mesh analog of "resynthesize
+    with a bigger AcceleratorConfig").  Shared by ``operands_from_plan``
+    and the serve_tm sharded executor.
     """
-    from ..core.tm import literals
-
-    Mp = _pad_to(cfg.n_classes, _axis_sizes(mesh).get("model", 1))
-    C, Lc, F2 = cfg.n_clauses, cfg.lc_cap, 2 * cfg.n_features
-
-    idx = np.full((Mp, C, Lc), F2, np.int32)  # F2 = the all-ones pad column
+    idx = np.full((Mp, C, Lc), F2, np.int32)
     pol = np.zeros((Mp, C), np.int32)
     next_slot = np.zeros(Mp, np.int64)
     # clause_id is sorted (decode_to_plan emits stream order), so one
@@ -283,9 +281,25 @@ def operands_from_plan(cfg: TMShardedConfig, plan, X: np.ndarray, mesh):
             raise ValueError(f"class {m} exceeds clause capacity {C}")
         ks = plan.lit_idx[bounds[c] : bounds[c + 1]]
         if ks.size > Lc:
-            raise ValueError(f"clause {c} has {ks.size} includes; cap {Lc}")
+            raise ValueError(
+                f"clause {c} has {ks.size} includes; capacity {Lc}"
+            )
         idx[m, j, : ks.size] = ks
         pol[m, j] = int(plan.clause_pol[c])
+    return idx, pol
+
+
+def operands_from_plan(cfg: TMShardedConfig, plan, X: np.ndarray, mesh):
+    """DecodedPlan + raw features -> real operands matching build_tm_sharded.
+
+    Raises if the plan exceeds the config's capacity plan (the mesh analog
+    of "resynthesize with a bigger AcceleratorConfig").
+    """
+    from ..core.tm import literals
+
+    Mp = _pad_to(cfg.n_classes, _axis_sizes(mesh).get("model", 1))
+    C, Lc, F2 = cfg.n_clauses, cfg.lc_cap, 2 * cfg.n_features
+    idx, pol = fill_clause_tables(plan, Mp, C, Lc, F2)
 
     B = X.shape[0]
     if B != cfg.batch:

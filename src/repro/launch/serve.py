@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ShapeSpec
 from ..configs.registry import get
 from ..dist import sharding as shd
 from ..dist.steps import make_decode_step, make_prefill_step
@@ -23,15 +22,22 @@ from ..models.api import family_for
 
 
 class Server:
-    """Fixed-shape serving engine: compiled once per (batch, prompt_cap)."""
+    """Fixed-shape serving engine: compiled once per (batch, prompt_cap,
+    gen_cap).  The decode-cache capacity is ``prompt_cap + gen_cap``,
+    fixed at construction, so every ``generate`` call reuses the same
+    compiled prefill/decode programs regardless of the requested token
+    count."""
 
-    def __init__(self, cfg, mesh, *, batch: int, prompt_cap: int):
+    def __init__(self, cfg, mesh, *, batch: int, prompt_cap: int,
+                 gen_cap: int = 16):
         self.cfg = cfg
         self.mesh = mesh
         shd.set_activation_mesh(mesh)
         self.fam = family_for(cfg)
         self.batch = batch
         self.prompt_cap = prompt_cap
+        self.gen_cap = gen_cap
+        self.cache_cap = prompt_cap + gen_cap
         self.prefill = jax.jit(make_prefill_step(cfg))
         self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
         self.params = None
@@ -43,13 +49,21 @@ class Server:
     def generate(self, prompts: np.ndarray, n_tokens: int) -> np.ndarray:
         """prompts: int32[B, prompt_len] -> int32[B, n_tokens].
 
-        The prompt is right-padded to ``prompt_cap + n_tokens`` so the
-        compiled prefill allocates decode-capacity KV buffers (fixed-shape
-        discipline); decode steps then fill slots sequentially, and the
-        per-step kv_len mask hides not-yet-written slots."""
+        The prompt is right-padded to ``cache_cap = prompt_cap + gen_cap``
+        so the compiled prefill allocates decode-capacity KV buffers
+        (fixed-shape discipline); decode steps then fill slots
+        sequentially, and the per-step kv_len mask hides not-yet-written
+        slots."""
         B, plen = prompts.shape
-        cap = self.prompt_cap + n_tokens
-        padded = np.zeros((B, cap), np.int32)
+        if plen > self.prompt_cap:
+            raise ValueError(
+                f"prompt length {plen} exceeds prompt_cap {self.prompt_cap}"
+            )
+        if n_tokens > self.gen_cap:
+            raise ValueError(
+                f"n_tokens {n_tokens} exceeds gen_cap {self.gen_cap}"
+            )
+        padded = np.zeros((B, self.cache_cap), np.int32)
         padded[:, :plen] = prompts
         logits, cache = self.prefill(self.params, {"tokens": jnp.asarray(padded)})
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -73,9 +87,9 @@ def main():
 
     cfg = get(args.arch)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    # decode cache capacity must cover prompt + generation
-    cap = args.prompt_len + args.gen
-    server = Server(cfg, mesh, batch=args.batch, prompt_cap=args.prompt_len)
+    # decode cache capacity (prompt + generation) is fixed at construction
+    server = Server(cfg, mesh, batch=args.batch, prompt_cap=args.prompt_len,
+                    gen_cap=args.gen)
     server.load_weights(family_for(cfg).init_params(cfg, jax.random.key(0)))
 
     rng = np.random.default_rng(0)

@@ -1,0 +1,38 @@
+"""Multi-tenant batched serving over the runtime-tunable TM accelerator.
+
+Layers:
+  executors.py   ServeCapacity + the three engine backends
+                 (interp / plan / sharded), one private jit cache each
+  batching.py    request queue, 32-datapoint-word coalescing, demux
+  registry.py    named model slots with hot-swap (Fig-8 recalibration)
+  metrics.py     latency/throughput instrumentation
+  server.py      TMServer — the public API tying it together
+"""
+
+from .batching import Batcher, RequestHandle
+from .executors import (
+    BACKENDS,
+    InterpExecutor,
+    PlanExecutor,
+    ServeCapacity,
+    ShardedExecutor,
+    make_executor,
+)
+from .metrics import ServeMetrics
+from .registry import ModelRegistry, SlotEntry
+from .server import TMServer
+
+__all__ = [
+    "BACKENDS",
+    "Batcher",
+    "InterpExecutor",
+    "ModelRegistry",
+    "PlanExecutor",
+    "RequestHandle",
+    "ServeCapacity",
+    "ServeMetrics",
+    "ShardedExecutor",
+    "SlotEntry",
+    "TMServer",
+    "make_executor",
+]

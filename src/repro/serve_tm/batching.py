@@ -1,0 +1,136 @@
+"""Request queue + dynamic batcher for the TM serving subsystem.
+
+Independent inference requests (each a {0,1}[b, F] block of datapoints for
+one model slot) are coalesced into engine batches of at most
+``batch_capacity`` rows — the 32-datapoint bit-packed words the engine
+natively consumes.  A partial trailing word is padded inside the engine
+(``pack_features``); here we only track the fill ratio.  Large requests
+transparently span multiple engine batches; predictions are demultiplexed
+back into each request's ``RequestHandle`` row by row.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+WORD = 32  # datapoints per bit-packed word (paper batching)
+
+
+class RequestHandle:
+    """Per-request future: filled row-by-row as engine batches complete."""
+
+    def __init__(self, rid: int, slot: str, n_rows: int):
+        self.rid = rid
+        self.slot = slot
+        self.n_rows = n_rows
+        self.predictions = np.full(n_rows, -1, np.int32)
+        self.enqueued_at = time.perf_counter()
+        self.completed_at: Optional[float] = None
+        self._filled = 0
+
+    @property
+    def done(self) -> bool:
+        return self._filled >= self.n_rows
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.enqueued_at
+
+    def result(self) -> np.ndarray:
+        if not self.done:
+            raise RuntimeError(
+                f"request {self.rid} has {self.n_rows - self._filled} rows "
+                f"pending; call TMServer.flush() first"
+            )
+        return self.predictions
+
+    def _fill(self, lo: int, preds: np.ndarray) -> None:
+        self.predictions[lo : lo + preds.shape[0]] = preds
+        self._filled += preds.shape[0]
+        if self.done:
+            self.completed_at = time.perf_counter()
+
+
+class _Pending:
+    """A queued request plus its consumption offset (requests larger than
+    one engine batch are drained incrementally)."""
+
+    __slots__ = ("handle", "x", "offset")
+
+    def __init__(self, handle: RequestHandle, x: np.ndarray):
+        self.handle = handle
+        self.x = x
+        self.offset = 0
+
+    @property
+    def remaining(self) -> int:
+        return self.x.shape[0] - self.offset
+
+
+# (handle, batch_lo, batch_hi, request_lo): rows [lo, hi) of the engine
+# batch belong to rows [request_lo, ...) of the request.
+Span = Tuple[RequestHandle, int, int, int]
+
+
+class Batcher:
+    """Per-slot FIFO queues + greedy coalescing into engine batches."""
+
+    def __init__(self, batch_capacity: int):
+        if batch_capacity % WORD != 0:
+            raise ValueError(
+                f"batch_capacity {batch_capacity} must be a multiple of "
+                f"{WORD} (bit-packed words)"
+            )
+        self.batch_capacity = batch_capacity
+        self._queues: Dict[str, Deque[_Pending]] = {}
+
+    def enqueue(self, handle: RequestHandle, x: np.ndarray) -> None:
+        self._queues.setdefault(handle.slot, deque()).append(
+            _Pending(handle, x)
+        )
+
+    def pending_slots(self) -> List[str]:
+        return [s for s, q in self._queues.items() if q]
+
+    def pending_rows(self, slot: str) -> int:
+        return sum(p.remaining for p in self._queues.get(slot, ()))
+
+    def next_batch(self, slot: str) -> Tuple[np.ndarray, List[Span]]:
+        """Pop up to ``batch_capacity`` rows off the slot's queue.
+
+        Returns the concatenated feature block plus the spans needed to
+        demux predictions back per-request.  Raises on an empty queue.
+        """
+        q = self._queues.get(slot)
+        if not q:
+            raise ValueError(f"no pending requests for slot {slot!r}")
+        parts: List[np.ndarray] = []
+        spans: List[Span] = []
+        rows = 0
+        while q and rows < self.batch_capacity:
+            p = q[0]
+            take = min(p.remaining, self.batch_capacity - rows)
+            parts.append(p.x[p.offset : p.offset + take])
+            spans.append((p.handle, rows, rows + take, p.offset))
+            rows += take
+            p.offset += take
+            if p.remaining == 0:
+                q.popleft()
+        return np.concatenate(parts, axis=0), spans
+
+    @staticmethod
+    def demux(spans: List[Span], preds: np.ndarray) -> int:
+        """Scatter engine predictions back into the request handles.
+        Returns how many requests COMPLETED with this batch."""
+        completed = 0
+        for handle, lo, hi, req_lo in spans:
+            handle._fill(req_lo, preds[lo:hi])
+            if handle.done:
+                completed += 1
+        return completed

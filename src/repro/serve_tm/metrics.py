@@ -1,0 +1,74 @@
+"""Latency/throughput instrumentation for the serving subsystem.
+
+Counters are recorded per engine batch (rows served, capacity fill,
+engine wall time), per completed request (queue-to-done latency) and per
+model swap.  ``summary()`` renders the JSON-friendly dict that
+``benchmarks/tm_serve.py`` emits into BENCH_tm_serve.json.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def _pcts(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    a = np.asarray(xs)
+    return {
+        "p50": float(np.percentile(a, 50)),
+        "p95": float(np.percentile(a, 95)),
+        "p99": float(np.percentile(a, 99)),
+    }
+
+
+class ServeMetrics:
+    def __init__(self):
+        self.batches = 0
+        self.rows = 0            # real datapoints served
+        self.padded_rows = 0     # engine rows incl. capacity padding
+        self.requests_completed = 0
+        self.swaps = 0
+        self.engine_s: List[float] = []
+        self.request_latency_s: List[float] = []
+        self.swap_s: List[float] = []
+
+    def record_batch(
+        self, rows: int, capacity: int, elapsed_s: float, completed: int
+    ) -> None:
+        self.batches += 1
+        self.rows += rows
+        self.padded_rows += capacity
+        self.engine_s.append(elapsed_s)
+        self.requests_completed += completed
+
+    def record_request_latency(self, latency_s: float) -> None:
+        self.request_latency_s.append(latency_s)
+
+    def record_swap(self, elapsed_s: float) -> None:
+        self.swaps += 1
+        self.swap_s.append(elapsed_s)
+
+    def summary(self) -> Dict:
+        engine_total = sum(self.engine_s)
+        return {
+            "batches": self.batches,
+            "rows": self.rows,
+            "requests_completed": self.requests_completed,
+            "swaps": self.swaps,
+            "fill_ratio": (
+                self.rows / self.padded_rows if self.padded_rows else 0.0
+            ),
+            "throughput_dps": (
+                self.rows / engine_total if engine_total > 0 else 0.0
+            ),
+            "engine_us": {
+                k: v * 1e6 for k, v in _pcts(self.engine_s).items()
+            },
+            "request_latency_us": {
+                k: v * 1e6 for k, v in _pcts(self.request_latency_s).items()
+            },
+            "swap_us": {k: v * 1e6 for k, v in _pcts(self.swap_s).items()},
+        }

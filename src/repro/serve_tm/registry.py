@@ -1,0 +1,71 @@
+"""Named model slots with hot-swap — the Fig-8 reprogram step as an API.
+
+A slot holds one programmed model (the executor backend's fixed-capacity
+buffers).  Installing into an existing slot is the runtime recalibration
+path: pure data movement, version bump, no recompilation (the server
+asserts the executor's compile cache stays at 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List
+
+from ..core.compress import CompressedModel
+
+
+@dataclasses.dataclass
+class SlotEntry:
+    name: str
+    model: CompressedModel
+    program: Any  # backend-specific fixed-capacity buffers
+    version: int
+    installed_at: float
+
+    @property
+    def n_classes(self) -> int:
+        return self.model.n_classes
+
+    @property
+    def n_features(self) -> int:
+        return self.model.n_features
+
+
+class ModelRegistry:
+    """slot name -> programmed model, for one executor backend."""
+
+    def __init__(self, executor):
+        self._executor = executor
+        self._slots: Dict[str, SlotEntry] = {}
+
+    def install(self, name: str, model: CompressedModel) -> SlotEntry:
+        """Program ``model`` into ``name`` (create or hot-swap)."""
+        prev = self._slots.get(name)
+        entry = SlotEntry(
+            name=name,
+            model=model,
+            program=self._executor.program(model),
+            version=(prev.version + 1) if prev else 1,
+            installed_at=time.time(),
+        )
+        self._slots[name] = entry
+        return entry
+
+    def get(self, name: str) -> SlotEntry:
+        if name not in self._slots:
+            raise KeyError(
+                f"no model registered in slot {name!r}; call "
+                f"TMServer.register({name!r}, model) first "
+                f"(known slots: {sorted(self._slots) or 'none'})"
+            )
+        return self._slots[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._slots)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._slots
+
+    def __len__(self) -> int:
+        return len(self._slots)

@@ -1,0 +1,132 @@
+"""Multi-tenant, dynamically-batched TM serving over the runtime-tunable
+accelerator (the ROADMAP's "serve heavy traffic" north star applied to the
+paper's Fig-4/Fig-8 engine).
+
+    server = TMServer(ServeCapacity(...), backend="plan")
+    server.register("gas", model)            # program a named slot
+    h = server.submit("gas", x)              # queue {0,1}[b, F] datapoints
+    server.flush()                           # batch + run + demux
+    preds = h.result()
+
+Tenancy: each slot is one model; requests are batched PER SLOT (models
+cannot share an engine pass) but all slots share the single compiled
+engine — the multi-tenant generalization of the paper's one-engine-many-
+models claim.  ``register`` on a live slot is the hot-swap/recalibration
+path: queued traffic for that slot is drained under the OLD program first,
+then the new model is installed; the engine is never recompiled, and
+``flush`` asserts ``compile_cache_size() == 1`` after every drain.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..core.compress import CompressedModel
+from .batching import Batcher, RequestHandle
+from .executors import ServeCapacity, make_executor
+from .metrics import ServeMetrics
+from .registry import ModelRegistry, SlotEntry
+
+
+class TMServer:
+    def __init__(
+        self,
+        capacity: Optional[ServeCapacity] = None,
+        backend: str = "interp",
+        mesh=None,
+    ):
+        self.capacity = capacity or ServeCapacity()
+        self.executor = make_executor(backend, self.capacity, mesh=mesh)
+        self.registry = ModelRegistry(self.executor)
+        self.batcher = Batcher(self.capacity.batch_capacity)
+        self.metrics = ServeMetrics()
+        self._next_rid = 0
+
+    # -- programming (the Fig-8 reprogram/recalibration path) ---------------
+
+    def register(self, slot: str, model: CompressedModel) -> SlotEntry:
+        """Install ``model`` into ``slot``; hot-swaps live slots.
+
+        Traffic already queued for the slot is drained under the OLD
+        program first (in-flight requests keep the model they were
+        submitted against), then the swap is pure data movement.
+        """
+        if slot in self.registry and self.batcher.pending_rows(slot):
+            self._flush_slot(slot)
+        t0 = time.perf_counter()
+        entry = self.registry.install(slot, model)
+        self.metrics.record_swap(time.perf_counter() - t0)
+        return entry
+
+    # -- traffic -------------------------------------------------------------
+
+    def submit(self, slot: str, x: np.ndarray) -> RequestHandle:
+        """Queue {0,1}[b, F] (or [F]) datapoints against ``slot``."""
+        entry = self.registry.get(slot)
+        x = np.asarray(x, dtype=np.uint8)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[0] == 0:
+            raise ValueError(f"expected {{0,1}}[b, F] features, got {x.shape}")
+        if x.shape[1] != entry.n_features:
+            raise ValueError(
+                f"request has {x.shape[1]} features; slot {slot!r} v"
+                f"{entry.version} expects {entry.n_features}"
+            )
+        if x.max(initial=0) > 1:
+            raise ValueError("features must be Boolean {0,1}")
+        handle = RequestHandle(self._next_rid, slot, x.shape[0])
+        self._next_rid += 1
+        self.batcher.enqueue(handle, x)
+        return handle
+
+    def flush(self) -> None:
+        """Drain every slot's queue through the engine."""
+        for slot in self.batcher.pending_slots():
+            self._flush_slot(slot)
+
+    def infer(self, slot: str, x: np.ndarray) -> np.ndarray:
+        """Synchronous convenience: submit + flush -> int32[b] predictions."""
+        handle = self.submit(slot, x)
+        self._flush_slot(slot)
+        return handle.result()
+
+    def class_sums(self, slot: str, x: np.ndarray) -> np.ndarray:
+        """Direct (unbatched-queue) class sums for ``x`` — the oracle hook
+        tests use for bit-exactness; does not touch the request queue."""
+        entry = self.registry.get(slot)
+        return self.executor.class_sums(entry.program, np.asarray(x, np.uint8))
+
+    # -- internals -----------------------------------------------------------
+
+    def _flush_slot(self, slot: str) -> None:
+        entry = self.registry.get(slot)
+        while self.batcher.pending_rows(slot):
+            X, spans = self.batcher.next_batch(slot)
+            t0 = time.perf_counter()
+            sums = self.executor.class_sums(entry.program, X)
+            dt = time.perf_counter() - t0
+            preds = np.argmax(sums, axis=1).astype(np.int32)
+            completed = Batcher.demux(spans, preds)
+            self.metrics.record_batch(
+                X.shape[0], self.capacity.batch_capacity, dt, completed
+            )
+            for handle, _, _, _ in spans:
+                if handle.done and handle.latency_s is not None:
+                    self.metrics.record_request_latency(handle.latency_s)
+        self._check_no_recompile()
+
+    def compile_cache_size(self) -> int:
+        """# compiled variants of this server's engine (must stay 1)."""
+        return self.executor.compile_cache_size()
+
+    def _check_no_recompile(self) -> None:
+        n = self.compile_cache_size()
+        if n > 1:
+            raise RuntimeError(
+                f"engine recompiled: {n} compiled variants (expected 1) — "
+                f"a model swap must be pure data movement"
+            )

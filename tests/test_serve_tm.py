@@ -1,0 +1,185 @@
+"""Multi-tenant batched serving subsystem: bit-exactness vs the dense
+oracle, hot swap under traffic with zero recompilation, batching/demux,
+capacity guards and metrics."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import TMConfig, batch_class_sums, state_from_actions
+from repro.core.compress import encode
+from repro.serve_tm import Batcher, RequestHandle, ServeCapacity, TMServer
+
+BACKENDS = ("interp", "plan", "sharded")
+
+CAP = ServeCapacity(
+    instruction_capacity=1024, feature_capacity=128, class_capacity=16,
+    clause_capacity=32, include_capacity=24, batch_words=2,
+)
+
+
+def _random_model(rng, M, C, F, density=0.05):
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = rng.random((M, C, 2 * F)) < density
+    return cfg, acts, encode(cfg, acts)
+
+
+def _oracle_sums(cfg, acts, X):
+    return np.asarray(
+        batch_class_sums(cfg, state_from_actions(cfg, acts), jnp.asarray(X))
+    )
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_class_sums_bit_exact(backend):
+    rng = np.random.default_rng(0)
+    cfg, acts, model = _random_model(rng, 5, 12, 40)
+    server = TMServer(CAP, backend=backend)
+    server.register("m", model)
+    X = rng.integers(0, 2, (50, 40)).astype(np.uint8)
+    assert (server.class_sums("m", X) == _oracle_sums(cfg, acts, X)).all()
+    assert (
+        server.infer("m", X) == _oracle_sums(cfg, acts, X).argmax(1)
+    ).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hot_swap_under_traffic_zero_recompile(backend):
+    """The acceptance criterion: swaps change class count AND feature
+    count mid-traffic; queued requests drain under the model they were
+    submitted against; the engine never recompiles."""
+    rng = np.random.default_rng(1)
+    cases = [(5, 12, 40), (3, 8, 24), (7, 10, 56)]
+    server = TMServer(CAP, backend=backend)
+    checks = []  # (handle, expected)
+    for i, (M, C, F) in enumerate(cases):
+        cfg, acts, model = _random_model(rng, M, C, F)
+        server.register("slot", model)  # drains any queued old-F traffic
+        for rows in (7, CAP.batch_capacity + 5, 1):
+            x = rng.integers(0, 2, (rows, F)).astype(np.uint8)
+            checks.append(
+                (server.submit("slot", x),
+                 _oracle_sums(cfg, acts, x).argmax(1))
+            )
+        if i == len(cases) - 1:
+            server.flush()
+    for handle, expected in checks:
+        assert handle.done
+        assert (handle.result() == expected).all()
+    assert server.compile_cache_size() == 1
+    assert server.metrics.swaps == len(cases)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_tenant_demux(backend):
+    rng = np.random.default_rng(2)
+    cfg_a, acts_a, model_a = _random_model(rng, 4, 10, 32)
+    cfg_b, acts_b, model_b = _random_model(rng, 6, 8, 48)
+    server = TMServer(CAP, backend=backend)
+    server.register("a", model_a)
+    server.register("b", model_b)
+    checks = []
+    for i in range(12):  # interleave tenants, varied request sizes
+        slot, cfg, acts = (("a", cfg_a, acts_a), ("b", cfg_b, acts_b))[i % 2]
+        x = rng.integers(0, 2, (1 + i, cfg.n_features)).astype(np.uint8)
+        checks.append(
+            (server.submit(slot, x), _oracle_sums(cfg, acts, x).argmax(1))
+        )
+    server.flush()
+    for handle, expected in checks:
+        assert (handle.result() == expected).all()
+    assert server.compile_cache_size() == 1
+
+
+def test_request_spans_batches():
+    rng = np.random.default_rng(3)
+    cfg, acts, model = _random_model(rng, 4, 10, 32)
+    server = TMServer(CAP, backend="plan")
+    server.register("m", model)
+    rows = 2 * CAP.batch_capacity + 3  # forces 3 engine batches
+    x = rng.integers(0, 2, (rows, 32)).astype(np.uint8)
+    preds = server.infer("m", x)
+    assert (preds == _oracle_sums(cfg, acts, x).argmax(1)).all()
+    assert server.metrics.batches == 3
+
+
+def test_partial_word_padding():
+    """B == 1 and B == 33 exercise partial 32-datapoint-word padding."""
+    rng = np.random.default_rng(4)
+    cfg, acts, model = _random_model(rng, 4, 10, 32)
+    server = TMServer(CAP, backend="interp")
+    server.register("m", model)
+    for rows in (1, 33):
+        x = rng.integers(0, 2, (rows, 32)).astype(np.uint8)
+        assert (
+            server.infer("m", x) == _oracle_sums(cfg, acts, x).argmax(1)
+        ).all()
+    # 1-D convenience submit
+    x1 = rng.integers(0, 2, 32).astype(np.uint8)
+    assert server.infer("m", x1).shape == (1,)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_capacity_guards(backend):
+    rng = np.random.default_rng(5)
+    server = TMServer(CAP, backend=backend)
+    _, _, too_many_classes = _random_model(rng, 20, 4, 16)
+    with pytest.raises(ValueError, match="class_capacity"):
+        server.register("m", too_many_classes)
+    _, _, too_many_features = _random_model(rng, 2, 4, 300)
+    with pytest.raises(ValueError, match="capacity"):
+        server.register("m", too_many_features)
+
+
+def test_unknown_slot_wrong_features_and_pending_result():
+    rng = np.random.default_rng(6)
+    cfg, acts, model = _random_model(rng, 4, 10, 32)
+    server = TMServer(CAP, backend="plan")
+    with pytest.raises(KeyError, match="no model registered"):
+        server.submit("ghost", np.zeros((1, 32), np.uint8))
+    server.register("m", model)
+    with pytest.raises(ValueError, match="features"):
+        server.submit("m", np.zeros((1, 16), np.uint8))
+    with pytest.raises(ValueError, match="Boolean"):
+        server.submit("m", np.full((1, 32), 2, np.uint8))
+    h = server.submit("m", np.zeros((4, 32), np.uint8))
+    with pytest.raises(RuntimeError, match="flush"):
+        h.result()
+    server.flush()
+    assert h.result().shape == (4,)
+
+
+def test_metrics_summary():
+    rng = np.random.default_rng(7)
+    cfg, acts, model = _random_model(rng, 4, 10, 32)
+    server = TMServer(CAP, backend="plan")
+    server.register("m", model)
+    for _ in range(5):
+        server.submit("m", rng.integers(0, 2, (10, 32)).astype(np.uint8))
+    server.flush()
+    s = server.metrics.summary()
+    assert s["rows"] == 50 and s["requests_completed"] == 5
+    assert s["swaps"] == 1 and 0 < s["fill_ratio"] <= 1
+    assert s["throughput_dps"] > 0
+    assert {"p50", "p95", "p99"} <= set(s["engine_us"])
+    assert s["request_latency_us"]["p50"] > 0
+
+
+def test_batcher_coalesces_and_splits():
+    b = Batcher(64)
+    h1, h2, h3 = (RequestHandle(i, "s", n) for i, n in ((0, 40), (1, 40), (2, 5)))
+    b.enqueue(h1, np.zeros((40, 4), np.uint8))
+    b.enqueue(h2, np.ones((40, 4), np.uint8))
+    b.enqueue(h3, np.zeros((5, 4), np.uint8))
+    X, spans = b.next_batch("s")
+    assert X.shape[0] == 64  # h1 whole + h2 head
+    assert [(s[1], s[2], s[3]) for s in spans] == [(0, 40, 0), (40, 64, 0)]
+    X2, spans2 = b.next_batch("s")
+    assert X2.shape[0] == 21  # h2 tail + h3
+    assert spans2[0][3] == 24  # resumes at row 24 of h2
+    assert b.pending_rows("s") == 0
+    with pytest.raises(ValueError, match="no pending"):
+        b.next_batch("s")
+    with pytest.raises(ValueError, match="multiple"):
+        Batcher(33)

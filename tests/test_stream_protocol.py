@@ -1,0 +1,156 @@
+"""uint16 stream-protocol hardening: header field validation at the wire
+boundaries, parse_header round-trips for both packet types, and the
+capacity guards of pack_features / MultiCoreAccelerator."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import TMConfig, batch_class_sums, state_from_actions
+from repro.core.compress import CompressedModel, encode
+from repro.core.interp import pack_features
+from repro.core.runtime import (
+    PAYLOAD_MASK,
+    Accelerator,
+    AcceleratorConfig,
+    MultiCoreAccelerator,
+    build_feature_stream,
+    build_instruction_stream,
+    parse_header,
+)
+
+
+def _model(n_instructions=8, n_classes=4, n_clauses=10, n_features=50):
+    return CompressedModel(
+        instructions=np.zeros(n_instructions, np.uint16),
+        n_classes=n_classes, n_clauses=n_clauses, n_features=n_features,
+    )
+
+
+def _dense_argmax(cfg, acts, X):
+    return np.asarray(
+        batch_class_sums(cfg, state_from_actions(cfg, acts), jnp.asarray(X))
+    ).argmax(1)
+
+
+# ---------------------------------------------------------------------------
+# header round-trips (both packet types)
+# ---------------------------------------------------------------------------
+
+def test_instruction_header_roundtrip():
+    stream = build_instruction_stream(_model(n_classes=9, n_clauses=33))
+    reset, is_instr, payload, w1, count = parse_header(stream)
+    assert reset and is_instr and payload == 9 and w1 == 33 and count == 8
+
+
+def test_feature_header_roundtrip():
+    X = np.zeros((5, 40), np.uint8)
+    reset, is_instr, payload, w1, count = parse_header(build_feature_stream(X))
+    assert reset and not is_instr
+    assert payload == 40 and w1 == 5 and count == 5 * 3  # ceil(40/16) words
+
+
+def test_instruction_count_crosses_word_split():
+    """count > 65535 spans header words 2 and 3."""
+    stream = build_instruction_stream(_model(n_instructions=70000))
+    _, is_instr, _, _, count = parse_header(stream)
+    assert is_instr and count == 70000
+    assert int(stream[2]) == 70000 & 0xFFFF and int(stream[3]) == 70000 >> 16
+
+
+def test_feature_count_crosses_word_split():
+    # 4100 datapoints x 17 features -> 2 words each -> 8200 words > 65535? no;
+    # use 40000 x 2 words = 80000 words, crossing the 16-bit split
+    X = np.zeros((40000, 17), np.uint8)
+    _, is_instr, payload, w1, count = parse_header(build_feature_stream(X))
+    assert not is_instr and payload == 17 and w1 == 40000 and count == 80000
+
+
+# ---------------------------------------------------------------------------
+# wire-width validation (no silent wraparound)
+# ---------------------------------------------------------------------------
+
+def test_instruction_stream_boundary_values():
+    # at the boundary: fits exactly, round-trips exactly
+    stream = build_instruction_stream(
+        _model(n_classes=PAYLOAD_MASK, n_clauses=0xFFFF)
+    )
+    _, _, payload, w1, _ = parse_header(stream)
+    assert payload == PAYLOAD_MASK == 16383 and w1 == 0xFFFF == 65535
+
+
+def test_instruction_stream_overflow_raises():
+    with pytest.raises(ValueError, match="n_classes"):
+        build_instruction_stream(_model(n_classes=PAYLOAD_MASK + 1))
+    with pytest.raises(ValueError, match="n_clauses"):
+        build_instruction_stream(_model(n_clauses=0x10000))
+
+
+def test_feature_stream_boundary_values():
+    X = np.zeros((0xFFFF, 4), np.uint8)  # 65535 datapoints round-trip
+    _, _, payload, w1, count = parse_header(build_feature_stream(X))
+    assert payload == 4 and w1 == 0xFFFF and count == 0xFFFF
+
+
+def test_feature_stream_overflow_raises():
+    with pytest.raises(ValueError, match="n_datapoints"):
+        build_feature_stream(np.zeros((0x10000, 4), np.uint8))
+    with pytest.raises(ValueError, match="n_features"):
+        build_feature_stream(np.zeros((1, PAYLOAD_MASK + 1), np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# payload edge cases through the full accelerator
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def acc():
+    return Accelerator(AcceleratorConfig(
+        instruction_capacity=2048, feature_capacity=64, class_capacity=8,
+        batch_words=1,
+    ))
+
+
+def test_feature_payload_f_multiple_of_16(acc):
+    """F % 16 == 0: the packed payload has no slack bits."""
+    rng = np.random.default_rng(0)
+    F = 32
+    cfg = TMConfig(n_classes=3, n_clauses=8, n_features=F)
+    acts = rng.random((3, 8, 2 * F)) < 0.1
+    X = rng.integers(0, 2, (20, F)).astype(np.uint8)
+    acc.feed(build_instruction_stream(encode(cfg, acts)))
+    preds = acc.feed(build_feature_stream(X))
+    assert (preds[:20] == _dense_argmax(cfg, acts, X)).all()
+
+
+def test_feature_payload_single_datapoint(acc):
+    """B == 1: one partial word, 31 padded lanes."""
+    rng = np.random.default_rng(1)
+    cfg = TMConfig(n_classes=3, n_clauses=8, n_features=20)
+    acts = rng.random((3, 8, 40)) < 0.1
+    X = rng.integers(0, 2, (1, 20)).astype(np.uint8)
+    acc.feed(build_instruction_stream(encode(cfg, acts)))
+    preds = acc.feed(build_feature_stream(X))
+    assert preds[0] == _dense_argmax(cfg, acts, X)[0]
+
+
+# ---------------------------------------------------------------------------
+# capacity guards with actionable messages
+# ---------------------------------------------------------------------------
+
+def test_pack_features_capacity_errors():
+    X = jnp.zeros((8, 100), jnp.uint8)
+    with pytest.raises(ValueError, match="feature_capacity"):
+        pack_features(X, 64, 1)
+    with pytest.raises(ValueError, match="batch_words"):
+        pack_features(jnp.zeros((40, 16), jnp.uint8), 64, 1)
+
+
+def test_multicore_infer_without_model():
+    mc = MultiCoreAccelerator(2, AcceleratorConfig(
+        instruction_capacity=256, feature_capacity=32, class_capacity=8,
+        batch_words=1,
+    ))
+    with pytest.raises(RuntimeError, match="no model loaded"):
+        mc.infer(np.zeros((4, 16), np.uint8))
