@@ -1,0 +1,134 @@
+"""Bench-regression gate for CI.
+
+Compares every ``BENCH_*.json`` in the current directory against the copy
+committed on a baseline git ref (default ``origin/main``) and fails when
+any ``throughput_dps`` value dropped more than ``--max-drop`` (default
+20%).  Values are matched by their JSON path (top-level and nested, e.g.
+``backends.plan.throughput_dps``), so per-backend regressions can't hide
+behind an improved sibling.
+
+Skips cleanly (exit 0) when:
+  * the baseline ref has no copy of a bench file (first time a bench
+    lands — today's bench trajectory starts empty), or
+  * the tiny-mode flags differ (a tiny run is not comparable to a full
+    run), or
+  * git/the ref is unavailable (shallow clone without the baseline).
+
+    python benchmarks/check_regression.py [--ref origin/main]
+                                          [--max-drop 0.20] [--dir .]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+
+def baseline_json(ref: str, name: str, repo_dir: str):
+    """The bench file as committed on ``ref`` (None when absent)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{name}"],
+            capture_output=True, cwd=repo_dir, timeout=30,
+        )
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  [skip] git unavailable for {ref}:{name}: {e}")
+        return None
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError as e:
+        print(f"  [skip] baseline {ref}:{name} is not valid JSON: {e}")
+        return None
+
+
+def throughput_paths(obj, prefix=""):
+    """-> {json.path: value} for every numeric throughput_dps key."""
+    found = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else k
+            if k == "throughput_dps" and isinstance(v, (int, float)):
+                found[path] = float(v)
+            else:
+                found.update(throughput_paths(v, path))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            found.update(throughput_paths(v, f"{prefix}[{i}]"))
+    return found
+
+
+def check_file(name: str, current: dict, baseline: dict, max_drop: float):
+    """-> list of failure strings for one bench file."""
+    if current.get("tiny") != baseline.get("tiny"):
+        print(
+            f"  [skip] {name}: tiny={current.get('tiny')} vs baseline "
+            f"tiny={baseline.get('tiny')} — not comparable"
+        )
+        return []
+    cur, base = throughput_paths(current), throughput_paths(baseline)
+    failures = []
+    for path, base_v in sorted(base.items()):
+        cur_v = cur.get(path)
+        if cur_v is None:
+            print(f"  [skip] {name}: {path} absent from current run")
+            continue
+        if base_v <= 0:
+            continue
+        drop = 1.0 - cur_v / base_v
+        status = "FAIL" if drop > max_drop else "ok"
+        print(
+            f"  [{status}] {name}: {path} {base_v:.0f} -> {cur_v:.0f} dps "
+            f"({-drop:+.1%})"
+        )
+        if drop > max_drop:
+            failures.append(
+                f"{name}:{path} dropped {drop:.1%} "
+                f"({base_v:.0f} -> {cur_v:.0f} dps, limit {max_drop:.0%})"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ref", default="origin/main",
+                    help="git ref holding the baseline BENCH_*.json files")
+    ap.add_argument("--max-drop", type=float, default=0.20,
+                    help="maximum allowed fractional throughput drop")
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the current BENCH_*.json files")
+    args = ap.parse_args()
+
+    bench_files = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not bench_files:
+        print(f"no BENCH_*.json in {args.dir!r}; nothing to gate")
+        return 0
+
+    failures = []
+    for path in bench_files:
+        name = os.path.basename(path)
+        with open(path) as f:
+            current = json.load(f)
+        baseline = baseline_json(args.ref, name, args.dir)
+        if baseline is None:
+            print(f"  [skip] {name}: no baseline on {args.ref} "
+                  f"(first run of this bench)")
+            continue
+        failures.extend(check_file(name, current, baseline, args.max_drop))
+
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

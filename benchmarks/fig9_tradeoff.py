@@ -7,7 +7,7 @@ in this framework:
   * ``interp``  — the faithful sequential interpreter (fully tunable: new
     model = new buffer contents, zero recompiles)
   * ``plan``    — decoded-plan parallel executor (tunable; plan rebuilt on
-    the host in O(I))
+    the host in O(n_inst))
   * ``dense``   — bitpacked dense clause evaluation (the MATADOR analog:
     specialized to a model SIZE; fastest batched path, recompiles when the
     architecture changes)
@@ -36,11 +36,11 @@ def run():
     for name in DATASETS:
         tm = trained_tm(name)
         cfg, model = tm.cfg, tm.model
-        I = model.n_instructions
-        i_cap = max(1024, 1 << int(np.ceil(np.log2(I + 1))))
+        n_inst = model.n_instructions
+        i_cap = max(1024, 1 << int(np.ceil(np.log2(n_inst + 1))))
         f_cap = 1 << int(np.ceil(np.log2(cfg.n_features + 1)))
         imem = np.zeros(i_cap, np.uint16)
-        imem[:I] = model.instructions
+        imem[:n_inst] = model.instructions
         imem_j = jnp.asarray(imem)
 
         for B in (32, 256):
@@ -49,7 +49,7 @@ def run():
 
             def run_interp(xx):
                 packed = pack_features(jnp.asarray(xx), f_cap, W)
-                return interpret_stream(imem_j, jnp.int32(I), packed,
+                return interpret_stream(imem_j, jnp.int32(n_inst), packed,
                                         jnp.int32(B), m_cap=16)
 
             t_interp = time_call(run_interp, x, repeats=5)

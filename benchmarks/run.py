@@ -13,7 +13,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-ALL = ("table1", "table2", "fig6", "fig9", "tm_serve")
+ALL = ("table1", "table2", "fig6", "fig9", "tm_serve", "tm_recal")
 
 
 def main() -> None:
@@ -34,6 +34,8 @@ def main() -> None:
             from .fig9_tradeoff import run as r
         elif name == "tm_serve":
             from .tm_serve import run as r
+        elif name == "tm_recal":
+            from .tm_recal import run as r
         else:
             print(f"unknown benchmark {name}", file=sys.stderr)
             continue

@@ -20,7 +20,6 @@ from .tm_bench_common import (
     trained_tm,
 )
 
-import jax
 import jax.numpy as jnp
 
 DATASETS = ("emg", "har", "gesture", "sensorless", "gas")
@@ -31,18 +30,18 @@ def run():
     for name in DATASETS:
         tm = trained_tm(name)
         cfg, model = tm.cfg, tm.model
-        I = model.n_instructions
-        i_cap = max(1024, 1 << int(np.ceil(np.log2(I + 1))))
+        n_inst = model.n_instructions
+        i_cap = max(1024, 1 << int(np.ceil(np.log2(n_inst + 1))))
         f_cap = 1 << int(np.ceil(np.log2(cfg.n_features + 1)))
         imem = np.zeros(i_cap, np.uint16)
-        imem[:I] = model.instructions
+        imem[:n_inst] = model.instructions
         imem_j = jnp.asarray(imem)
 
         x1 = tm.x_test[:32]  # one word = up to 32 datapoints
 
         def run_interp(x):
             packed = pack_features(jnp.asarray(x), f_cap, 1)
-            return interpret_stream(imem_j, jnp.int32(I), packed,
+            return interpret_stream(imem_j, jnp.int32(n_inst), packed,
                                     jnp.int32(x.shape[0]), m_cap=16)
 
         t_single = time_call(run_interp, tm.x_test[:1], repeats=10)
@@ -62,13 +61,13 @@ def run():
 
         t_plan = time_call(run_plan, lits32, repeats=10)
 
-        lat_model = modeled_efpga_latency_s(I)
-        e_model = modeled_efpga_energy_j(I)
+        lat_model = modeled_efpga_latency_s(n_inst)
+        e_model = modeled_efpga_energy_j(n_inst)
         rows.append((
             f"table2/{name}_acc", 0.0, round(tm.accuracy, 3),
         ))
         rows.append((
-            f"table2/{name}_instructions", 0.0, I,
+            f"table2/{name}_instructions", 0.0, n_inst,
         ))
         rows.append((
             f"table2/{name}_interp_single_us", round(t_single * 1e6, 1),

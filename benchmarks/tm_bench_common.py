@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TMConfig, accuracy, fit, include_actions, init_state
-from repro.core.compress import CompressedModel, decode_to_plan, encode
+from repro.core.compress import CompressedModel, encode
 from repro.data.pipeline import TM_DATASETS, booleanized_tm_dataset
 
 CYCLES_PER_INSTRUCTION = 4  # Fig 5 pipeline

@@ -20,7 +20,7 @@ import json
 import os
 from typing import Dict, List
 
-from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from .roofline import HBM_BW, PEAK_FLOPS
 
 HERE = os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__)))))

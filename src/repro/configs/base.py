@@ -7,7 +7,7 @@ assigned input-shape cells.  ``registry.py`` maps ``--arch <id>`` to these.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 def _pad_to(x: int, mult: int) -> int:

@@ -28,7 +28,15 @@ from .tm import (
     packed_class_sums,
     dense_model_bytes,
 )
-from .train import train_batch, train_batch_parallel, fit, accuracy
+from .train import (
+    accuracy,
+    fit,
+    fit_step,
+    sample_class_delta,
+    sample_keys,
+    train_batch,
+    train_batch_parallel,
+)
 from .booleanize import Booleanizer, booleanize_images
 
 __all__ = [
@@ -49,6 +57,9 @@ __all__ = [
     "train_batch",
     "train_batch_parallel",
     "fit",
+    "fit_step",
+    "sample_keys",
+    "sample_class_delta",
     "accuracy",
     "Booleanizer",
     "booleanize_images",

@@ -73,8 +73,8 @@ class CompressedModel:
         return 1.0 - (self.n_instructions * 16) / dense_bits
 
 
-def _emit(e: int, cc: int, p: int, l: int, off: int) -> int:
-    return (e << E_BIT) | (cc << CC_BIT) | (p << P_BIT) | (l << L_BIT) | off
+def _emit(e: int, cc: int, p: int, lbit: int, off: int) -> int:
+    return (e << E_BIT) | (cc << CC_BIT) | (p << P_BIT) | (lbit << L_BIT) | off
 
 
 def encode(cfg: TMConfig, actions: np.ndarray) -> CompressedModel:
@@ -103,22 +103,49 @@ def encode(cfg: TMConfig, actions: np.ndarray) -> CompressedModel:
                 e_tog ^= 1
                 new_class = False
             ptr = 0
-            first = True
             for k in ks.tolist():
                 delta = int(k) - ptr
                 while delta > MAX_OFF:
                     out.append(_emit(e_tog, cc_tog, pol, 0, EXTEND))
                     delta -= EXTEND
-                    first = False
                 out.append(_emit(e_tog, cc_tog, pol, int(k) & 1, delta))
                 ptr = int(k)
-                first = False
     return CompressedModel(
         instructions=np.asarray(out, dtype=np.uint16),
         n_classes=M,
         n_clauses=C,
         n_features=cfg.n_features,
     )
+
+
+def validate_roundtrip(
+    cfg: TMConfig, actions: np.ndarray, model: CompressedModel, X: np.ndarray
+) -> None:
+    """Publication gate for the Fig-8 loop: the compressed stream must
+    reproduce dense inference BIT-EXACTLY on the probe inputs before it may
+    be shipped to a live accelerator.  Decodes ``model`` back to an action
+    mask and compares ``batch_class_sums`` against the original ``actions``
+    (ordinal equality is too strict — empty clauses are legitimately
+    dropped at encode time).  Raises ``ValueError`` on any mismatch.
+    """
+    import jax.numpy as jnp
+
+    from .tm import batch_class_sums, state_from_actions
+
+    decoded = decode(model)
+    s_dense = batch_class_sums(
+        cfg, state_from_actions(cfg, actions), jnp.asarray(X)
+    )
+    s_stream = batch_class_sums(
+        cfg, state_from_actions(cfg, decoded), jnp.asarray(X)
+    )
+    if not bool(jnp.array_equal(s_dense, s_stream)):
+        bad = int(jnp.sum(jnp.any(s_dense != s_stream, axis=1)))
+        raise ValueError(
+            f"compressed stream is not bit-exact against the dense oracle: "
+            f"{bad}/{X.shape[0]} probe datapoints disagree — refusing to "
+            f"publish the model"
+        )
 
 
 def decode(model: CompressedModel) -> np.ndarray:

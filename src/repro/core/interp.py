@@ -96,7 +96,7 @@ def interpret_stream(
         e = (ins >> E_BIT) & 1
         cc = (ins >> CC_BIT) & 1
         p = (ins >> P_BIT) & 1
-        l = (ins >> L_BIT) & 1
+        lbit = (ins >> L_BIT) & 1
         off = (ins & OFF_MASK).astype(jnp.int32)
 
         boundary = active & ((e != prev_e) | (cc != prev_cc))
@@ -115,7 +115,7 @@ def interpret_stream(
         ptr = ptr + jnp.where(active, jnp.where(is_ext, EXTEND, off), 0)
         feat = jnp.clip(ptr >> 1, 0, f_cap - 1)
         word = packed_features[feat]  # [W] uint32 — Literal Select (Fig 4.5)
-        lit = jnp.where(l == 1, ~word, word)
+        lit = jnp.where(lbit == 1, ~word, word)
         acc = jnp.where(do_inc, acc & lit, acc)
         nonempty = nonempty | do_inc
         return (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, sums), None

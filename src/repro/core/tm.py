@@ -108,7 +108,7 @@ def predict(cfg: TMConfig, state: Array, x: Array) -> Array:
     actions = include_actions(cfg, state)
     lits = literals(x)  # [B, 2F]
     sums = jax.vmap(
-        lambda l: class_sums(cfg, actions, l, training=False)
+        lambda row: class_sums(cfg, actions, row, training=False)
     )(lits)  # [B, M]
     return jnp.argmax(sums, axis=-1).astype(jnp.int32)
 
@@ -118,7 +118,9 @@ def batch_class_sums(cfg: TMConfig, state: Array, x: Array) -> Array:
     """int32[B, M] inference-semantics class sums (oracle for all fast paths)."""
     actions = include_actions(cfg, state)
     lits = literals(x)
-    return jax.vmap(lambda l: class_sums(cfg, actions, l, training=False))(lits)
+    return jax.vmap(
+        lambda row: class_sums(cfg, actions, row, training=False)
+    )(lits)
 
 
 # ---------------------------------------------------------------------------

@@ -18,12 +18,26 @@ Type II (combats false positives):
 This trainer is the "Model Training Node" of the paper's Fig 8 system: it is
 cheap (bitwise + increments), runs on host/CPU-class hardware, and its output
 is compressed into the instruction stream that reprograms the accelerator.
+
+Seeding contract (fold-in based, reproducible under ``jax.jit``):
+
+  * ``sample_keys(key, n, offset)`` derives the per-sample keys: the sample
+    at GLOBAL position ``offset + i`` always trains under
+    ``fold_in(key, offset + i)`` — no sequential split chain, so the same
+    (key, position) pair yields the same feedback regardless of batch
+    slicing, device count or how many steps ran before.
+  * ``train_batch`` / ``train_batch_parallel`` consume samples at positions
+    ``0..B-1`` of their call key.
+  * ``fit_step(..., step=s)`` uses call key ``fold_in(key, s)`` — any step
+    is independently re-derivable, which makes training resumable (the
+    RecalWorker's incremental API).
+  * ``fit`` derives epoch ``e``, batch ``b`` as step ``e * n_batches + b``
+    and the epoch-``e`` shuffle as ``fold_in(fold_in(key, _SHUFFLE), e)``.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +45,16 @@ import jax.numpy as jnp
 from .tm import TMConfig, clause_polarities, literals
 
 Array = jax.Array
+
+# Domain-separation tag for shuffle keys (outside the step-index range).
+_SHUFFLE = 0x5F5F5F5F
+
+
+def sample_keys(key: Array, n: int, offset: Array | int = 0) -> Array:
+    """Per-sample training keys for samples at positions offset..offset+n-1."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        offset + jnp.arange(n)
+    )
 
 
 def _type_i_delta(cfg: TMConfig, key: Array, clause_out: Array, lits: Array) -> Array:
@@ -116,7 +140,7 @@ def train_batch(
         k, x, y = inp
         return _sample_update(cfg, st, k, x, y), None
 
-    keys = jax.random.split(key, xb.shape[0])
+    keys = sample_keys(key, xb.shape[0])
     xb = xb.astype(jnp.bool_)
     state, _ = jax.lax.scan(step, state, (keys, xb, yb))
     return state
@@ -148,9 +172,64 @@ def train_batch_parallel(
         new_n = _class_feedback(cfg, k_not, state[neg], lits, jnp.bool_(False))
         return d.at[neg].add(new_n - state[neg])
 
-    keys = jax.random.split(key, xb.shape[0])
+    keys = sample_keys(key, xb.shape[0])
     deltas = jax.vmap(sample_delta)(keys, xb.astype(jnp.bool_), yb)
     return jnp.clip(state + jnp.sum(deltas, axis=0), 1, 2 * N)
+
+
+def sample_class_delta(
+    cfg: TMConfig,
+    class_state: Array,  # int32[Mc, C, 2F]  a slice of class rows
+    m_ids: Array,  # int32[Mc]  global class ids of those rows
+    key: Array,  # this sample's key (from ``sample_keys``)
+    x: Array,  # {0,1}[F]
+    y: Array,  # int32 scalar
+) -> Array:
+    """One sample's summed-delta feedback restricted to a class-row slice.
+
+    Bit-identical to the corresponding rows of ``train_batch_parallel``'s
+    per-sample delta: the target row uses the sample's k_tgt stream, the
+    sampled negative row its k_not stream, every other row is zero.  This
+    is the class-sharded form ``dist.steps.make_tm_train_step`` maps over
+    the ``model`` mesh axis (each device feeds back only the classes it
+    owns, at the cost of evaluating both feedback branches per owned row).
+    """
+    lits = literals(x)
+    k_neg, k_tgt, k_not = jax.random.split(key, 3)
+    M = cfg.n_classes
+    neg = jax.random.randint(k_neg, (), 0, M - 1)
+    neg = jnp.where(neg >= y, neg + 1, neg).astype(jnp.int32)
+
+    def one(m, s_m):
+        new_t = _class_feedback(cfg, k_tgt, s_m, lits, jnp.bool_(True))
+        new_n = _class_feedback(cfg, k_not, s_m, lits, jnp.bool_(False))
+        return jnp.where(
+            m == y, new_t - s_m, jnp.where(m == neg, new_n - s_m, 0)
+        )
+
+    return jax.vmap(one)(m_ids, class_state)
+
+
+def fit_step(
+    cfg: TMConfig,
+    state: Array,
+    key: Array,
+    xb: Array,
+    yb: Array,
+    *,
+    step: int,
+    parallel: bool = False,
+) -> Array:
+    """One resumable training step (the RecalWorker's incremental API).
+
+    The batch trains under ``fold_in(key, step)``, so the update for a
+    given (key, step, batch) triple is identical no matter how many steps
+    ran before — a fine-tune loop can stop, checkpoint the (state, key,
+    step) triple, and resume bit-exactly.
+    """
+    kb = jax.random.fold_in(key, step)
+    f = train_batch_parallel if parallel else train_batch
+    return f(cfg, state, kb, xb, yb)
 
 
 def fit(
@@ -165,19 +244,27 @@ def fit(
     shuffle: bool = True,
     parallel: bool = False,
 ) -> Array:
-    """Host-side epoch loop (the paper's Raspberry-Pi-class training node)."""
+    """Host-side epoch loop (the paper's Raspberry-Pi-class training node).
+
+    Keys are fold-in derived (see module docstring): epoch ``e`` batch
+    ``b`` is ``fit_step(step=e * n_batches + b)`` — no host-side split
+    chain, so the loop is reproducible and restartable mid-epoch.
+    """
     n = x.shape[0]
     n_batches = max(1, n // batch)
+    k_shuffle = jax.random.fold_in(key, _SHUFFLE)
     for e in range(epochs):
-        key, kshuf = jax.random.split(key)
         order = (
-            jax.random.permutation(kshuf, n) if shuffle else jnp.arange(n)
+            jax.random.permutation(jax.random.fold_in(k_shuffle, e), n)
+            if shuffle
+            else jnp.arange(n)
         )
         for b in range(n_batches):
             idx = order[b * batch : (b + 1) * batch]
-            key, kb = jax.random.split(key)
-            step = train_batch_parallel if parallel else train_batch
-            state = step(cfg, state, kb, x[idx], y[idx])
+            state = fit_step(
+                cfg, state, key, x[idx], y[idx],
+                step=e * n_batches + b, parallel=parallel,
+            )
     return state
 
 

@@ -9,10 +9,10 @@ edge-dataset dimensionalities used by the paper's Table 2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+import zlib
+from typing import Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -90,8 +90,10 @@ def make_tm_dataset(
     Class prototypes are keyed by the DATASET identity (so train/test splits
     share a distribution); ``seed`` only draws the samples.  ``drift`` shifts
     the prototypes deterministically (sensor aging / environment change —
-    the paper's Fig 8 recalibration trigger)."""
-    proto_seed = abs(hash(spec.name)) % (2**31)
+    the paper's Fig 8 recalibration trigger).  The identity hash is a stable
+    CRC (NOT the salted builtin ``hash``), so the same dataset is generated
+    across processes and machines — the recal example/bench rely on it."""
+    proto_seed = zlib.crc32(spec.name.encode()) % (2**31)
     rng_proto = np.random.default_rng(proto_seed)
     protos = rng_proto.normal(size=(spec.n_classes, spec.n_raw_features))
     if drift:

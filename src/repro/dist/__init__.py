@@ -5,7 +5,9 @@ Modules:
   sharding.py    activation-sharding hints + per-family parameter sharding
                  rules (the single source of truth for mesh layouts)
   steps.py       make_train_step / make_prefill_step / make_decode_step —
-                 the jittable programs the launchers and dry-run lower
+                 the jittable programs the launchers and dry-run lower —
+                 plus make_tm_train_step, the class-sharded TM feedback
+                 step the recal worker scales out with
   tm_sharded.py  class-parallel x batch-parallel compressed-TM executor
                  (the Fig-7 multi-core split, mesh-native)
 """

@@ -4,17 +4,31 @@
 activation-memory knob recorded per-arch in configs as
 ``train_microbatches``): the global batch is split on its leading dim and
 scanned, grads accumulated in fp32, then one AdamW update is applied.
+
+``make_tm_train_step`` is the mesh-sharded Tsetlin Machine feedback step
+(the Fig-8 training node scaled out): TA state shards its class dim over
+``model``, the batch shards over the non-``model`` axes, per-sample
+summed-delta feedback is computed locally and psum'd across the batch
+axes.  Bit-identical to ``core.train.train_batch_parallel`` on any mesh
+(integer deltas commute), which tests/test_recal.py asserts.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+try:  # jax >= 0.6 moved shard_map out of experimental
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from ..core.train import sample_class_delta, sample_keys
 from ..models.api import family_for
 from ..optim import adamw
+from .sharding import _axis_sizes, batch_axes
 
 
 def opt_config_for(cfg) -> adamw.AdamWConfig:
@@ -72,6 +86,67 @@ def make_train_step(
         return new_params, new_state, {"loss": loss, "grad_norm": gnorm}
 
     return step
+
+
+def make_tm_train_step(tm_cfg, mesh, *, batch: int) -> Callable:
+    """-> step(state, key, xb, yb) -> state, sharded over ``mesh``.
+
+    ``state`` int32[M, C, 2F] shards classes over ``model``; ``xb``/``yb``
+    shard their leading dim over the non-``model`` axes (``batch_axes``).
+    Each device computes the summed-delta feedback of its batch shard
+    restricted to its class rows (``core.train.sample_class_delta``), the
+    deltas are psum'd over the batch axes, and one clipped update is
+    applied — the large-class-count scale-out of the recal worker.
+
+    Seeding follows the core contract: global sample ``i`` (its position
+    in the UNSHARDED batch) trains under ``fold_in(key, i)``, so the
+    result equals ``train_batch_parallel(cfg, state, key, xb, yb)``
+    bit-exactly regardless of the mesh shape.
+    """
+    sizes = _axis_sizes(mesh)
+    n_model = sizes.get("model", 1)
+    M, N = tm_cfg.n_classes, tm_cfg.n_states
+    if M % n_model:
+        raise ValueError(
+            f"the model axis size ({n_model}) must divide n_classes={M} for "
+            f"the class-sharded TM train step; pad the config or shrink the "
+            f"mesh"
+        )
+    bx = batch_axes(mesh, batch)
+    has_model = "model" in sizes
+    state_spec = P("model", None, None) if has_model else P()
+    m_local = M // n_model
+
+    def local(state_l, key, xb_l, yb_l):
+        B_l = xb_l.shape[0]
+        shard = jnp.int32(0)
+        for ax in bx or ():
+            shard = shard * sizes[ax] + jax.lax.axis_index(ax)
+        keys = sample_keys(key, B_l, offset=shard * B_l)
+        m0 = (
+            jax.lax.axis_index("model") * m_local if has_model else jnp.int32(0)
+        )
+        m_ids = m0 + jnp.arange(m_local)
+        deltas = jax.vmap(
+            lambda k, x, y: sample_class_delta(
+                tm_cfg, state_l, m_ids, k, x, y
+            )
+        )(keys, xb_l.astype(jnp.bool_), yb_l)
+        delta = jnp.sum(deltas, axis=0)
+        if bx:
+            delta = jax.lax.psum(delta, bx)
+        return jnp.clip(state_l + delta, 1, 2 * N)
+
+    def step(state, key, xb, yb):
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(state_spec, P(), P(bx, None), P(bx)),
+            out_specs=state_spec,
+            check_rep=False,
+        )(state, key, xb, yb)
+
+    return jax.jit(step)
 
 
 def make_prefill_step(cfg) -> Callable:

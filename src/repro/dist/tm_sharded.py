@@ -29,12 +29,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
+try:  # jax >= 0.6 moved shard_map out of experimental
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import _pad_to
@@ -157,7 +160,6 @@ def _local_plan_executor_clausemajor(pad_idx, clause_class, clause_pol,
     One gather + one AND-reduction per clause — fully parallel over clauses
     AND datapoints (this is the layout ``build_tm_sharded`` distributes).
     """
-    NCL = clause_pol.shape[0]
     ones = jnp.uint32(_ONES32)
     words = jnp.take(packed1, pad_idx, axis=0)  # [NCL, Lc, W]
     acc = jax.lax.reduce(words, ones, jnp.bitwise_and, dimensions=(1,))

@@ -18,20 +18,20 @@ def plan_to_operands(
     """Host-side: flatten the plan into per-instruction operand vectors.
 
     Padded slots AND literal row 0 forever and never emit (last=0)."""
-    I = plan.n_includes
-    assert I <= i_cap, f"plan has {I} includes; instruction capacity {i_cap}"
+    n_inc = plan.n_includes
+    assert n_inc <= i_cap, f"plan has {n_inc} includes; instruction capacity {i_cap}"
     lit_idx = np.zeros(i_cap, np.int32)
     last = np.zeros(i_cap, np.int32)
     pol = np.zeros(i_cap, np.int32)
     cls = np.zeros(i_cap, np.int32)
-    lit_idx[:I] = plan.lit_idx
+    lit_idx[:n_inc] = plan.lit_idx
     # last include of each clause = where clause_id changes (or stream ends)
-    if I > 0:
-        boundary = np.ones(I, bool)
+    if n_inc > 0:
+        boundary = np.ones(n_inc, bool)
         boundary[:-1] = plan.clause_id[1:] != plan.clause_id[:-1]
-        last[:I] = boundary.astype(np.int32)
-        pol[:I] = plan.clause_pol[plan.clause_id]
-        cls[:I] = plan.clause_class[plan.clause_id]
+        last[:n_inc] = boundary.astype(np.int32)
+        pol[:n_inc] = plan.clause_pol[plan.clause_id]
+        cls[:n_inc] = plan.clause_class[plan.clause_id]
     return lit_idx, last, pol, cls
 
 

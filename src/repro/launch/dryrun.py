@@ -197,7 +197,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) 
 
     cost = compiled.cost_analysis()
     mem = compiled.memory_analysis()
-    hlo = compiled.as_text()
 
     # layer-count extrapolation (u=1, u=2)
     units = _unit_count(cfg)

@@ -12,12 +12,10 @@ Every family exposes:
 
 from __future__ import annotations
 
-from types import SimpleNamespace
-from typing import Any
 
 import jax
 
-from ..configs.base import ArchConfig, ShapeSpec
+from ..configs.base import ArchConfig
 from . import dense
 from .encdec import Whisper
 from .recurrent_lm import XLSTM, Zamba2

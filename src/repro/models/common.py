@@ -6,7 +6,7 @@ and rematerialized (activation checkpointing) in training.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

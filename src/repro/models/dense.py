@@ -9,7 +9,7 @@ Layers are stacked and scanned; training remats each layer.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -158,7 +158,6 @@ def decode(cfg: ArchConfig, params, cache: Dict[str, Array], batch: Dict[str, Ar
     """One-token step. batch: token [B, 1], pos scalar. Cache donated."""
     h = embed_lookup(params["embed"], batch["token"])  # [B, 1, D]
     pos = batch["pos"]
-    positions = pos[None] if pos.ndim == 0 else pos
 
     def layer_fn(p, hh, c):
         kc, vc = c

@@ -26,7 +26,6 @@ from .common import (
     gqa_attention,
     lm_logits,
     rms_norm,
-    rope,
     sds,
 )
 

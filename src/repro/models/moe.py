@@ -113,9 +113,10 @@ def moe_ffn_ep(p: Dict[str, Array], x: Array, cfg: ArchConfig, mesh) -> Array:
     are summed with one psum over ``model`` — replacing the GSPMD
     replicate+all-reduce of the [E, C, D] dispatch buffer (which dominated
     the baseline collective term) with a [T_local, D] reduction."""
-    from functools import partial
-
-    from jax.experimental.shard_map import shard_map
+    try:  # jax >= 0.6 moved shard_map out of experimental
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from ..dist.sharding import batch_axes

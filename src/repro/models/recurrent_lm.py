@@ -8,14 +8,13 @@
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, ShapeSpec
 from .common import (
-    AttnParams,
     attn_param_specs,
     stack_apply,
     stack_apply_collect,

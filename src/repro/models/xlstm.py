@@ -83,7 +83,9 @@ def mlstm_forward(p, x: Array, cfg: ArchConfig, *, chunk: int = 256) -> Array:
     Q = min(chunk, S)
     assert S % Q == 0
     nC = S // Q
-    rs = lambda a: a.reshape(B, nC, Q, *a.shape[2:])
+    def rs(a):
+        return a.reshape(B, nC, Q, *a.shape[2:])
+
     qc, kc, vc, ic, fc = map(rs, (q, k, v, ig, fg))
 
     cumf = jnp.cumsum(fc, axis=2)  # [B,nC,Q,H]
@@ -126,7 +128,9 @@ def mlstm_forward(p, x: Array, cfg: ArchConfig, *, chunk: int = 256) -> Array:
     C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
     n0 = jnp.zeros((B, H, hd), jnp.float32)
     m0 = jnp.full((B, H), -1e30, jnp.float32)
-    swap = lambda a: jnp.moveaxis(a, 1, 0)  # scan over chunks
+    def swap(a):  # scan over chunks
+        return jnp.moveaxis(a, 1, 0)
+
     (_, _, _), ys = jax.lax.scan(
         chunk_step,
         (C0, n0, m0),

@@ -7,7 +7,7 @@ optimizer state fits the per-chip HBM budget — recorded in DESIGN.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,9 @@ class AdamWState(NamedTuple):
 
 
 def init(cfg: AdamWConfig, params: Any) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.moment_dtype)
+
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),
@@ -41,7 +43,9 @@ def init(cfg: AdamWConfig, params: Any) -> AdamWState:
 
 def init_specs(cfg: AdamWConfig, param_specs: Any) -> AdamWState:
     """ShapeDtypeStruct version for dry-run lowering (no allocation)."""
-    spec = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    def spec(p):
+        return jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+
     return AdamWState(
         step=jax.ShapeDtypeStruct((), jnp.int32),
         m=jax.tree.map(spec, param_specs),

@@ -1,0 +1,31 @@
+"""Online recalibration: the paper's Fig-8 loop as a running subsystem.
+
+The low-power training node (``core.train``) and the runtime-tunable
+accelerator (``serve_tm``) were two endpoints; this package is the wire
+between them, run continuously under live traffic:
+
+  monitor.py     DriftMonitor — windowed accuracy / class-sum-margin
+                 statistics over served predictions; decides WHEN
+  worker.py      RecalWorker — incremental fold-in-seeded fine-tuning
+                 (``fit_step``), optional dist-mesh sharded step; produces
+                 the new TA state
+  compressor.py  Compressor — include-stream encoding with a bit-exact
+                 dense-oracle publication gate; produces WHAT ships
+  controller.py  RecalController — drain-then-swap publication through the
+                 serving registry, post-swap validation, auto-rollback
+"""
+
+from .compressor import CompressionReport, Compressor
+from .controller import RecalController, RecalEvent
+from .monitor import DriftDecision, DriftMonitor
+from .worker import RecalWorker
+
+__all__ = [
+    "CompressionReport",
+    "Compressor",
+    "DriftDecision",
+    "DriftMonitor",
+    "RecalController",
+    "RecalEvent",
+    "RecalWorker",
+]

@@ -1,0 +1,67 @@
+"""Trained TA state -> validated ``CompressedModel`` (WHAT gets shipped).
+
+The compression stage of the Fig-8 loop.  Encoding is the cheap part; the
+point of this class is the *publication gate*: before a stream may be
+hot-swapped into a live accelerator it is decoded back and checked
+bit-exact against the dense oracle (``core.compress.validate_roundtrip``)
+on a deterministic probe batch plus, optionally, a sample of real traffic.
+A model that fails the gate never reaches the registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.compress import CompressedModel, encode, validate_roundtrip
+from ..core.tm import TMConfig, include_actions
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionReport:
+    """What the compressor hands the controller alongside the model."""
+
+    model: CompressedModel
+    n_includes: int
+    compression_ratio: float
+    probe_rows: int
+
+
+class Compressor:
+    def __init__(self, *, probe_rows: int = 64, probe_seed: int = 0):
+        self.probe_rows = probe_rows
+        self.probe_seed = probe_seed
+
+    def compress(
+        self,
+        cfg: TMConfig,
+        state,
+        *,
+        traffic_sample: Optional[np.ndarray] = None,
+    ) -> CompressionReport:
+        """Encode + validate.  ``traffic_sample`` ({0,1}[B, F]) extends the
+        deterministic probe with rows from the live distribution, so the
+        gate exercises exactly the inputs the swap will face."""
+        actions = np.asarray(include_actions(cfg, state))
+        model = encode(cfg, actions)
+        rng = np.random.default_rng(self.probe_seed)
+        probe = rng.integers(
+            0, 2, (self.probe_rows, cfg.n_features)
+        ).astype(np.uint8)
+        if traffic_sample is not None:
+            sample = np.asarray(traffic_sample, np.uint8)
+            if sample.ndim != 2 or sample.shape[1] != cfg.n_features:
+                raise ValueError(
+                    f"traffic_sample must be {{0,1}}[B, {cfg.n_features}], "
+                    f"got {sample.shape}"
+                )
+            probe = np.concatenate([probe, sample], axis=0)
+        validate_roundtrip(cfg, actions, model, probe)
+        return CompressionReport(
+            model=model,
+            n_includes=int(actions.sum()),
+            compression_ratio=model.compression_ratio(cfg),
+            probe_rows=probe.shape[0],
+        )

@@ -1,0 +1,104 @@
+"""The Fig-8 Model Training Node as a long-lived worker.
+
+Owns one (``TMConfig``, TA-state) pair and fine-tunes it incrementally on
+labelled batches via ``core.train.fit_step`` — every update is keyed by a
+monotone step counter under the fold-in seeding contract, so a worker can
+be checkpointed as the (key, step, state) triple and resumed bit-exactly.
+
+For large class counts the per-step update can run as the ``dist``-mesh
+sharded feedback step (``dist.steps.make_tm_train_step``: classes over
+``model``, batch over the data axes) — same contract, same bits.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tm import TMConfig, init_state
+from ..core.train import fit_step
+
+
+class RecalWorker:
+    def __init__(
+        self,
+        cfg: TMConfig,
+        state: Optional[jax.Array] = None,
+        *,
+        key: Optional[jax.Array] = None,
+        mesh=None,
+        sharded_batch: int = 0,
+    ):
+        """``mesh`` + ``sharded_batch`` opt into the dist-mesh sharded
+        training step: batches of exactly ``sharded_batch`` rows run the
+        class-sharded ``make_tm_train_step`` (bit-identical to the local
+        path); other batch sizes fall back to the local ``fit_step``."""
+        self.cfg = cfg
+        self.key = key if key is not None else jax.random.key(0)
+        self.state = state if state is not None else init_state(cfg, self.key)
+        self.step_count = 0
+        self._sharded_step = None
+        self._sharded_batch = 0
+        if mesh is not None and sharded_batch:
+            from ..dist.steps import make_tm_train_step
+
+            self._sharded_step = make_tm_train_step(
+                cfg, mesh, batch=sharded_batch
+            )
+            self._sharded_batch = sharded_batch
+
+    # -- training ------------------------------------------------------------
+
+    def fine_tune(self, xb: np.ndarray, yb: np.ndarray) -> int:
+        """One incremental update on a labelled batch; returns the step id
+        the batch trained under (for exact replay/resume)."""
+        step = self.step_count
+        xb = jnp.asarray(np.asarray(xb, np.uint8))
+        yb = jnp.asarray(np.asarray(yb, np.int32))
+        if self._sharded_step is not None and xb.shape[0] == self._sharded_batch:
+            # same bits as the local path: fold_in(key, step) is the call
+            # key, global sample i trains under fold_in(call_key, i)
+            kb = jax.random.fold_in(self.key, step)
+            self.state = self._sharded_step(self.state, kb, xb, yb)
+        else:
+            self.state = fit_step(
+                self.cfg, self.state, self.key, xb, yb,
+                step=step, parallel=True,
+            )
+        self.step_count += 1
+        return step
+
+    def fine_tune_epochs(
+        self, x: np.ndarray, y: np.ndarray, *, epochs: int, batch: int
+    ) -> int:
+        """Epoch loop over a buffered corpus (shuffled per epoch under the
+        worker's own key stream); returns the number of steps taken."""
+        n = x.shape[0]
+        n_batches = max(1, n // batch)
+        taken = 0
+        for e in range(epochs):
+            order = np.asarray(
+                jax.random.permutation(
+                    jax.random.fold_in(self.key, 0x7E000000 + self.step_count),
+                    n,
+                )
+            )
+            for b in range(n_batches):
+                idx = order[b * batch : (b + 1) * batch]
+                self.fine_tune(x[idx], y[idx])
+                taken += 1
+        return taken
+
+    # -- snapshots (rollback support) ----------------------------------------
+
+    def snapshot(self) -> np.ndarray:
+        """Host copy of the TA state (restore() it to undo fine-tuning —
+        note train steps DONATE the device state buffer, so the device
+        array itself must not be aliased across steps)."""
+        return np.asarray(self.state)
+
+    def restore(self, snap: np.ndarray) -> None:
+        self.state = jnp.asarray(snap)

@@ -9,9 +9,7 @@ axis-consistent mesh that fits the surviving chip count.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
-
-import jax
+from typing import Any, Tuple
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import ArchConfig

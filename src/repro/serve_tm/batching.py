@@ -28,6 +28,7 @@ class RequestHandle:
         self.slot = slot
         self.n_rows = n_rows
         self.predictions = np.full(n_rows, -1, np.int32)
+        self.class_sums: Optional[np.ndarray] = None  # int32[n_rows, M]
         self.enqueued_at = time.perf_counter()
         self.completed_at: Optional[float] = None
         self._filled = 0
@@ -50,8 +51,16 @@ class RequestHandle:
             )
         return self.predictions
 
-    def _fill(self, lo: int, preds: np.ndarray) -> None:
+    def _fill(
+        self, lo: int, preds: np.ndarray, sums: Optional[np.ndarray] = None
+    ) -> None:
         self.predictions[lo : lo + preds.shape[0]] = preds
+        if sums is not None:
+            if self.class_sums is None:
+                self.class_sums = np.zeros(
+                    (self.n_rows, sums.shape[1]), sums.dtype
+                )
+            self.class_sums[lo : lo + sums.shape[0]] = sums
         self._filled += preds.shape[0]
         if self.done:
             self.completed_at = time.perf_counter()
@@ -125,12 +134,19 @@ class Batcher:
         return np.concatenate(parts, axis=0), spans
 
     @staticmethod
-    def demux(spans: List[Span], preds: np.ndarray) -> int:
-        """Scatter engine predictions back into the request handles.
-        Returns how many requests COMPLETED with this batch."""
+    def demux(
+        spans: List[Span],
+        preds: np.ndarray,
+        sums: Optional[np.ndarray] = None,
+    ) -> int:
+        """Scatter engine predictions (and, when given, the class-sum rows
+        the drift monitor taps) back into the request handles.  Returns how
+        many requests COMPLETED with this batch."""
         completed = 0
         for handle, lo, hi, req_lo in spans:
-            handle._fill(req_lo, preds[lo:hi])
+            handle._fill(
+                req_lo, preds[lo:hi], None if sums is None else sums[lo:hi]
+            )
             if handle.done:
                 completed += 1
         return completed

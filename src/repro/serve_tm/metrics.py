@@ -31,9 +31,13 @@ class ServeMetrics:
         self.padded_rows = 0     # engine rows incl. capacity padding
         self.requests_completed = 0
         self.swaps = 0
+        self.recals = 0          # completed recalibration pipeline runs
+        self.rollbacks = 0       # post-swap validation failures
         self.engine_s: List[float] = []
         self.request_latency_s: List[float] = []
         self.swap_s: List[float] = []
+        self.recal_train_s: List[float] = []
+        self.recal_compress_s: List[float] = []
 
     def record_batch(
         self, rows: int, capacity: int, elapsed_s: float, completed: int
@@ -50,6 +54,15 @@ class ServeMetrics:
     def record_swap(self, elapsed_s: float) -> None:
         self.swaps += 1
         self.swap_s.append(elapsed_s)
+
+    def record_recal(self, train_s: float, compress_s: float) -> None:
+        """One completed recalibration (train + compress + publish)."""
+        self.recals += 1
+        self.recal_train_s.append(train_s)
+        self.recal_compress_s.append(compress_s)
+
+    def record_rollback(self) -> None:
+        self.rollbacks += 1
 
     def summary(self) -> Dict:
         engine_total = sum(self.engine_s)
@@ -71,4 +84,12 @@ class ServeMetrics:
                 k: v * 1e6 for k, v in _pcts(self.request_latency_s).items()
             },
             "swap_us": {k: v * 1e6 for k, v in _pcts(self.swap_s).items()},
+            "recals": self.recals,
+            "rollbacks": self.rollbacks,
+            "recal_train_s": {
+                k: float(v) for k, v in _pcts(self.recal_train_s).items()
+            },
+            "recal_compress_s": {
+                k: float(v) for k, v in _pcts(self.recal_compress_s).items()
+            },
         }

@@ -4,15 +4,24 @@ A slot holds one programmed model (the executor backend's fixed-capacity
 buffers).  Installing into an existing slot is the runtime recalibration
 path: pure data movement, version bump, no recompilation (the server
 asserts the executor's compile cache stays at 1).
+
+Every install records *provenance* (who produced the model: initial
+deploy, a recal pipeline, a rollback) and the previous entries are kept in
+a bounded per-slot history, so the recal controller can roll a bad swap
+back WITHOUT re-programming: the old entry's buffers are still alive and
+are reinstalled as-is.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 from ..core.compress import CompressedModel
+
+# Previous versions retained per slot for rollback / provenance queries.
+HISTORY_DEPTH = 4
 
 
 @dataclasses.dataclass
@@ -22,6 +31,7 @@ class SlotEntry:
     program: Any  # backend-specific fixed-capacity buffers
     version: int
     installed_at: float
+    provenance: str = "install"
 
     @property
     def n_classes(self) -> int:
@@ -38,8 +48,11 @@ class ModelRegistry:
     def __init__(self, executor):
         self._executor = executor
         self._slots: Dict[str, SlotEntry] = {}
+        self._history: Dict[str, List[SlotEntry]] = {}
 
-    def install(self, name: str, model: CompressedModel) -> SlotEntry:
+    def install(
+        self, name: str, model: CompressedModel, provenance: str = "install"
+    ) -> SlotEntry:
         """Program ``model`` into ``name`` (create or hot-swap)."""
         prev = self._slots.get(name)
         entry = SlotEntry(
@@ -48,9 +61,53 @@ class ModelRegistry:
             program=self._executor.program(model),
             version=(prev.version + 1) if prev else 1,
             installed_at=time.time(),
+            provenance=provenance,
         )
+        if prev is not None:
+            self._push_history(name, prev)
         self._slots[name] = entry
         return entry
+
+    def rollback(self, name: str) -> SlotEntry:
+        """Reinstall the slot's previous model (the recal safety net).
+
+        Pure data movement squared: the previous entry's programmed
+        buffers are reused verbatim — no decode, no reprogram.  The
+        version still advances monotonically so observers can tell a
+        rollback from time going backwards.
+        """
+        hist = self._history.get(name)
+        if not hist:
+            raise KeyError(
+                f"slot {name!r} has no previous version to roll back to"
+            )
+        prev = hist.pop()
+        cur = self.get(name)
+        entry = SlotEntry(
+            name=name,
+            model=prev.model,
+            program=prev.program,
+            version=cur.version + 1,
+            installed_at=time.time(),
+            provenance=f"rollback:v{cur.version}->v{prev.version}",
+        )
+        self._push_history(name, cur)
+        self._slots[name] = entry
+        return entry
+
+    def _push_history(self, name: str, entry: SlotEntry) -> None:
+        hist = self._history.setdefault(name, [])
+        hist.append(entry)
+        del hist[:-HISTORY_DEPTH]
+
+    def previous(self, name: str) -> Optional[SlotEntry]:
+        """The entry a ``rollback(name)`` would reinstall (None if none)."""
+        hist = self._history.get(name)
+        return hist[-1] if hist else None
+
+    def history(self, name: str) -> List[SlotEntry]:
+        """Retained previous entries, oldest first (excludes the live one)."""
+        return list(self._history.get(name, ()))
 
     def get(self, name: str) -> SlotEntry:
         if name not in self._slots:

@@ -47,18 +47,40 @@ class TMServer:
 
     # -- programming (the Fig-8 reprogram/recalibration path) ---------------
 
-    def register(self, slot: str, model: CompressedModel) -> SlotEntry:
+    def register(
+        self,
+        slot: str,
+        model: CompressedModel,
+        provenance: str = "install",
+    ) -> SlotEntry:
         """Install ``model`` into ``slot``; hot-swaps live slots.
 
         Traffic already queued for the slot is drained under the OLD
         program first (in-flight requests keep the model they were
         submitted against), then the swap is pure data movement.
+        ``provenance`` records who produced the model (e.g. the recal
+        pipeline tags its swaps ``recal:<reason>``).
         """
         if slot in self.registry and self.batcher.pending_rows(slot):
             self._flush_slot(slot)
         t0 = time.perf_counter()
-        entry = self.registry.install(slot, model)
+        entry = self.registry.install(slot, model, provenance=provenance)
         self.metrics.record_swap(time.perf_counter() - t0)
+        return entry
+
+    def rollback(self, slot: str) -> SlotEntry:
+        """Reinstall ``slot``'s previous model (recal safety net).
+
+        Same drain discipline as ``register``: queued traffic finishes
+        under the CURRENT program, then the previous entry's programmed
+        buffers are swapped back in verbatim.
+        """
+        if self.batcher.pending_rows(slot):
+            self._flush_slot(slot)
+        t0 = time.perf_counter()
+        entry = self.registry.rollback(slot)
+        self.metrics.record_swap(time.perf_counter() - t0)
+        self.metrics.record_rollback()
         return entry
 
     # -- traffic -------------------------------------------------------------
@@ -110,7 +132,7 @@ class TMServer:
             sums = self.executor.class_sums(entry.program, X)
             dt = time.perf_counter() - t0
             preds = np.argmax(sums, axis=1).astype(np.int32)
-            completed = Batcher.demux(spans, preds)
+            completed = Batcher.demux(spans, preds, sums)
             self.metrics.record_batch(
                 X.shape[0], self.capacity.batch_capacity, dt, completed
             )

@@ -1,12 +1,9 @@
 """Roofline-analysis machinery tests."""
 
-import jax
-import jax.numpy as jnp
 
 from repro.analysis.corrections import scan_correction_flops
 from repro.analysis.roofline import (
     HBM_BW,
-    ICI_BW,
     PEAK_FLOPS,
     build_roofline,
     collective_bytes,

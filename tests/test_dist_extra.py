@@ -3,7 +3,6 @@
 TM executor against the dense oracle, and the dry-run lowering entry point.
 """
 
-import dataclasses
 from types import SimpleNamespace
 
 import numpy as np

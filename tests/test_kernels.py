@@ -1,7 +1,6 @@
 """Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
 against the pure-jnp ref oracles."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,7 +14,6 @@ from repro.kernels.tm_interp.kernel import tm_interp
 from repro.kernels.tm_interp.ops import (
     pack_interleaved_literals,
     plan_to_operands,
-    tm_compressed_class_sums,
 )
 from repro.kernels.tm_interp.ref import tm_interp_ref
 
@@ -95,12 +93,12 @@ def test_tm_interp_kernel_vs_oracle(M, C, F, B, bi, bw):
 
 def test_tm_interp_kernel_vs_ref_module():
     """Kernel vs its own ref.py oracle on raw operands."""
-    I, L2, W, M = 256, 64, 2, 8
-    lit_idx = rng.integers(0, L2, I).astype(np.int32)
-    last = (rng.random(I) < 0.2).astype(np.int32)
+    n_inc, L2, W, M = 256, 64, 2, 8
+    lit_idx = rng.integers(0, L2, n_inc).astype(np.int32)
+    last = (rng.random(n_inc) < 0.2).astype(np.int32)
     last[-1] = 1
-    pol = np.where(rng.random(I) < 0.5, 1, -1).astype(np.int32)
-    cls = np.sort(rng.integers(0, M, I)).astype(np.int32)
+    pol = np.where(rng.random(n_inc) < 0.5, 1, -1).astype(np.int32)
+    cls = np.sort(rng.integers(0, M, n_inc)).astype(np.int32)
     lits = rng.integers(0, 2**32, (L2, W), dtype=np.uint32)
     args = tuple(jnp.asarray(a) for a in (lit_idx, last, pol, cls))
     out_k = tm_interp(*args, jnp.asarray(lits), m_cap=M,

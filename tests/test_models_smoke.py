@@ -75,7 +75,7 @@ def test_full_config_dims(arch):
     """Exact assigned dims are wired through (no allocation: specs only)."""
     cfg = get(arch)
     fam = family_for(cfg)
-    specs = fam.param_specs(cfg)
+    fam.param_specs(cfg)
     n = count_params(cfg)
     assert n > 0
     if cfg.is_moe:

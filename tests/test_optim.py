@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim import adamw
-from repro.optim.compress import CompressedGrads, GradCompressor
+from repro.optim.compress import GradCompressor
 
 
 def test_adamw_converges_on_quadratic():

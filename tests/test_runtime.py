@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import TMConfig, batch_class_sums, init_state
+from repro.core import TMConfig, batch_class_sums
 from repro.core.compress import encode
 from repro.core.runtime import (
     Accelerator,

@@ -6,7 +6,6 @@ keep seeing 1 device), exercising lower+compile of smoke configs on a real
 (4 data x 2 model) mesh including the multi-pod axis layout.
 """
 
-import json
 import os
 import subprocess
 import sys

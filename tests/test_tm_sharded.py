@@ -26,16 +26,16 @@ def case():
 
 
 def _operands(plan, chunk):
-    I = plan.n_includes
-    I_cap = -(-I // chunk) * chunk
+    n_inc = plan.n_includes
+    I_cap = -(-n_inc // chunk) * chunk
     lit_idx = np.zeros(I_cap, np.int32)
-    lit_idx[:I] = plan.lit_idx
+    lit_idx[:n_inc] = plan.lit_idx
     seg_last = np.zeros(I_cap, np.int32)
-    seg_last[:I][
+    seg_last[:n_inc][
         np.concatenate([plan.clause_id[1:] != plan.clause_id[:-1], [True]])
     ] = 1
     cid = np.full(I_cap, plan.n_clauses_total, np.int32)
-    cid[:I] = plan.clause_id
+    cid[:n_inc] = plan.clause_id
     return lit_idx, seg_last, cid
 
 
