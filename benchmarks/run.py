@@ -13,7 +13,8 @@ from __future__ import annotations
 import argparse
 import sys
 
-ALL = ("table1", "table2", "fig6", "fig9", "tm_serve", "tm_recal")
+ALL = ("table1", "table2", "fig6", "fig9", "tm_serve", "tm_recal",
+       "tm_kernels")
 
 
 def main() -> None:
@@ -36,6 +37,8 @@ def main() -> None:
             from .tm_serve import run as r
         elif name == "tm_recal":
             from .tm_recal import run as r
+        elif name == "tm_kernels":
+            from .tm_kernels import run as r
         else:
             print(f"unknown benchmark {name}", file=sys.stderr)
             continue

@@ -1,0 +1,198 @@
+"""Kernel-level microbenchmark: the compressed-inference engines head to
+head over a small capacity sweep.  Emits ``BENCH_tm_kernels.json`` (CWD)
+and the harness CSV rows — the seed of the kernel perf trajectory the
+regression gate tracks.
+
+    PYTHONPATH=src python -m benchmarks.run --only tm_kernels
+
+Backends (all bit-exact, asserted per sweep point):
+
+  * ``interp``   — core.interp.interpret_stream, the paper-faithful
+    sequential stream interpreter (one instruction per scan step);
+  * ``plan``     — core.interp.plan_class_sums, gather + segmented reduce;
+  * ``popcount`` — kernels.tm_popcount, packed clause words + bitplane
+    transpose + ``lax.population_count`` class reduction (XLA twin of the
+    Pallas kernel — what serving runs off-TPU).
+
+``BENCH_TINY=1`` shrinks the sweep for the CI smoke step.  ``BENCH_PALLAS=1``
+additionally times the Pallas kernels in interpret mode (CPU emulation —
+slow, relative ordering only; excluded from the regression-gated numbers).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import TMConfig
+from repro.core.compress import decode_to_plan, encode
+from repro.core.interp import interpret_stream, pack_features, pad_plan, plan_class_sums
+from repro.core.tm import literals
+from repro.kernels.tm_interp.kernel import tm_interp
+from repro.kernels.tm_interp.ops import pack_interleaved_literals, plan_to_operands
+from repro.kernels.tm_popcount.kernel import tm_popcount, tm_popcount_xla
+from repro.kernels.tm_popcount.ops import plan_to_popcount_operands
+from repro.kernels.tuning import choose_blocks
+
+from .tm_bench_common import time_call
+
+OUT_PATH = "BENCH_tm_kernels.json"
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_TINY", "0") == "1"
+
+
+def _with_pallas() -> bool:
+    return os.environ.get("BENCH_PALLAS", "0") == "1"
+
+
+def _sweep(tiny: bool):
+    """(name, i_cap, n_features, m_cap, batch_words, n_clauses/class)."""
+    if tiny:
+        return [("tiny", 512, 64, 8, 1, 16)]
+    return [
+        ("small", 1024, 128, 16, 2, 32),
+        ("medium", 2048, 256, 16, 4, 48),
+        # the ServeCapacity() default deployment point — the acceptance
+        # criterion (popcount >= 2x interp) is judged here
+        ("default", 4096, 256, 16, 4, 64),
+    ]
+
+
+def _synthetic_point(rng, i_cap, n_features, m_cap, n_clauses, fill=0.85):
+    """A random model whose include count fills ~``fill`` of ``i_cap``."""
+    M = m_cap // 2 if m_cap > 2 else m_cap  # model under capacity, like prod
+    density = min(0.5, fill * i_cap / (M * n_clauses * 2 * n_features))
+    cfg = TMConfig(n_classes=M, n_clauses=n_clauses, n_features=n_features)
+    while True:
+        acts = rng.random((M, n_clauses, 2 * n_features)) < density
+        model = encode(cfg, acts)
+        plan = decode_to_plan(model)
+        if plan.n_includes <= i_cap:
+            return cfg, model, plan
+        density *= 0.9
+
+
+def _bench_point(name, i_cap, n_features, m_cap, batch_words, n_clauses):
+    rng = np.random.default_rng(11)
+    cfg, model, plan = _synthetic_point(rng, i_cap, n_features, m_cap, n_clauses)
+    B = batch_words * 32
+    X = rng.integers(0, 2, (B, n_features)).astype(np.uint8)
+    n_inst = model.n_instructions
+    f_cap, l2_cap = n_features, 2 * n_features
+
+    # ---- operand staging (program time, off the clock) -------------------
+    imem = np.zeros(i_cap, np.uint16)
+    imem[:n_inst] = model.instructions
+    packed_feat = pack_features(jnp.asarray(X), f_cap, batch_words)
+    args_interp = (jnp.asarray(imem), jnp.int32(n_inst), packed_feat,
+                   jnp.int32(B))
+
+    ncl_cap = max(64, -(-plan.n_clauses_total // 64) * 64)
+    li, ci, cc, cp = pad_plan(plan, i_cap, ncl_cap)
+    lits_bool = literals(jnp.asarray(X))
+    args_plan = tuple(jnp.asarray(a) for a in (li, ci, cc, cp)) + (lits_bool,)
+
+    packed_lits = pack_interleaved_literals(jnp.asarray(X))
+    pc_ops = plan_to_popcount_operands(plan, i_cap, m_cap, l2_cap=l2_cap)
+    args_pc = tuple(jnp.asarray(a) for a in pc_ops) + (packed_lits,)
+
+    calls = {
+        "interp": lambda: interpret_stream(*args_interp, m_cap=m_cap),
+        "plan": lambda: plan_class_sums(
+            *args_plan, n_clause_cap=ncl_cap, m_cap=m_cap
+        ),
+        "popcount": lambda: tm_popcount_xla(*args_pc),
+    }
+    if _with_pallas():
+        it_ops = plan_to_operands(plan, i_cap, m_cap=m_cap)
+        args_it = tuple(jnp.asarray(a) for a in it_ops) + (packed_lits,)
+        bi, bw = choose_blocks(i_cap, batch_words)
+        calls["interp_pallas"] = lambda: tm_interp(
+            *args_it, m_cap=m_cap, interpret=True
+        )
+        calls["popcount_pallas"] = lambda: tm_popcount(
+            *args_pc, block_instructions=bi, block_words=bw, interpret=True
+        )
+
+    # ---- bit-exactness across engines (the proof rides the bench) -------
+    ref = np.asarray(calls["interp"]())[:cfg.n_classes, :B]
+    exact = {
+        "plan": bool(
+            (np.asarray(calls["plan"]())[:, :cfg.n_classes].T == ref).all()
+        ),
+        "popcount": bool(
+            (np.asarray(calls["popcount"]())[:cfg.n_classes, :B] == ref).all()
+        ),
+    }
+
+    bytes_moved = {
+        "interp": 2 * i_cap + 4 * f_cap * batch_words + 4 * m_cap * B,
+        "plan": 8 * i_cap + 8 * ncl_cap + B * l2_cap + 4 * B * m_cap,
+        "popcount": (8 * i_cap + 8 * m_cap * (-(-i_cap // 32))
+                     + 4 * l2_cap * batch_words + 4 * m_cap * B),
+    }
+
+    point = {
+        "capacity": {
+            "instruction_capacity": i_cap,
+            "feature_capacity": n_features,
+            "class_capacity": m_cap,
+            "batch_words": batch_words,
+            "batch": B,
+        },
+        "model": {
+            "n_classes": cfg.n_classes,
+            "n_clauses": cfg.n_clauses,
+            "n_instructions": n_inst,
+        },
+        "bit_exact": exact,
+        "backends": {},
+    }
+    rows = []
+    for backend, fn in calls.items():
+        repeats = 5 if backend.endswith("_pallas") else 20
+        t = time_call(fn, repeats=repeats)
+        stats = {
+            "us_per_call": t * 1e6,
+            "throughput_dps": B / t,
+            "instructions_per_s": n_inst / t,
+        }
+        if backend in bytes_moved:
+            stats["bytes_moved_per_call"] = bytes_moved[backend]
+        point["backends"][backend] = stats
+        rows.append((
+            f"tm_kernels_{name}_{backend}",
+            f"{t * 1e6:.1f}",
+            f"dps={B / t:.0f};ips={n_inst / t:.0f}",
+        ))
+    point["speedup_popcount_vs_interp"] = (
+        point["backends"]["popcount"]["throughput_dps"]
+        / point["backends"]["interp"]["throughput_dps"]
+    )
+    return point, rows
+
+
+def run():
+    tiny = _tiny()
+    report = {
+        "bench": "tm_kernels",
+        "tiny": tiny,
+        "sweep": [],
+    }
+    rows = []
+    for name, *caps in _sweep(tiny):
+        point, point_rows = _bench_point(name, *caps)
+        point["name"] = name
+        report["sweep"].append(point)
+        rows.extend(point_rows)
+    last = report["sweep"][-1]
+    report["default_point"] = last["name"]
+    report["speedup_popcount_vs_interp"] = last["speedup_popcount_vs_interp"]
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    return rows

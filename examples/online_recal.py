@@ -17,7 +17,8 @@ Acceptance (asserted below, for every backend):
   * post-swap accuracy recovers above the pre-drift baseline minus 2%
   * the engine is NEVER recompiled: compile_cache_size() == 1 throughout
 
-Run:  PYTHONPATH=src python examples/online_recal.py [interp|plan|sharded|all]
+Run:  PYTHONPATH=src python examples/online_recal.py \
+          [interp|plan|sharded|popcount|all]
 """
 
 import sys
@@ -128,7 +129,8 @@ def run_backend(backend, cfg, init_state, booler):
 def main():
     choice = sys.argv[1] if len(sys.argv) > 1 else "all"
     backends = (
-        ("interp", "plan", "sharded") if choice == "all" else (choice,)
+        ("interp", "plan", "sharded", "popcount")
+        if choice == "all" else (choice,)
     )
     cfg, init_state, booler = train_initial()
     finals = {b: run_backend(b, cfg, init_state, booler) for b in backends}

@@ -20,6 +20,15 @@ Two execution strategies over the SAME instruction stream (compress.py):
 
 Both match dense inference (tm.batch_class_sums) bit-exactly; property tests
 enforce it.
+
+jit policy (the serving-executor contract): every hot helper here is jitted
+at module level with STATIC capacity arguments only — capacities are
+synthesis-time constants, so each deployment compiles exactly once.  Buffer
+donation is deliberately NOT annotated on these shared engines: callers
+(benchmarks, tests, notebooks) legitimately reuse operand buffers across
+calls, which donation would invalidate.  The serving executors wrap
+``.__wrapped__`` in their own private jit and donate their per-call staging
+buffers there instead (serve_tm/executors.py).
 """
 
 from __future__ import annotations
@@ -35,9 +44,14 @@ from .tm import unpack_bits
 Array = jax.Array
 
 
+@partial(jax.jit, static_argnames=("n_feature_cap", "n_word_cap"))
 def pack_features(x: Array, n_feature_cap: int, n_word_cap: int) -> Array:
     """{0,1}[B, F] -> uint32[F_cap, W_cap] feature memory (bit b of word w =
-    datapoint w*32+b).  B must be <= 32*W_cap; F <= F_cap."""
+    datapoint w*32+b).  B must be <= 32*W_cap; F <= F_cap.
+
+    jitted with static capacities (the executor contract: capacities are
+    synthesis-time constants, so this compiles once per deployment).  The
+    shape checks below are trace-time and therefore free per call."""
     x = x.astype(jnp.uint32)
     B, F = x.shape
     if F > n_feature_cap:
@@ -84,8 +98,14 @@ def interpret_stream(
     B = w * 32
     ones = jnp.uint32(0xFFFFFFFF)
 
-    def finalize(sums, cls, pol, acc, nonempty):
-        contrib = jnp.where(nonempty, pol, 0) * unpack_bits(acc)  # [B]
+    def finalize(sums, cls, pol, acc, gate):
+        """Scatter-add the finished clause iff ``gate``.
+
+        The contribution is zeroed by the gate rather than selecting
+        between two whole sum banks (the old ``jnp.where(boundary,
+        sums.at[...], sums)`` materialized and re-derived the full
+        [m_cap, B] bank every step — dead work on non-boundary steps)."""
+        contrib = jnp.where(gate, pol, 0) * unpack_bits(acc)  # [B]
         return sums.at[cls].add(contrib)
 
     def step(carry, i):
@@ -100,8 +120,8 @@ def interpret_stream(
         off = (ins & OFF_MASK).astype(jnp.int32)
 
         boundary = active & ((e != prev_e) | (cc != prev_cc))
-        # finalize previous clause on boundary
-        sums = jnp.where(boundary, finalize(sums, cls, pol, acc, nonempty), sums)
+        # finalize previous clause on boundary (single gated scatter-add)
+        sums = finalize(sums, cls, pol, acc, boundary & nonempty)
         cls = jnp.where(boundary & (e != prev_e), cls + 1, cls)
         ptr = jnp.where(boundary, 0, ptr)
         acc = jnp.where(boundary, ones, acc)

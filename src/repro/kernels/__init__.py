@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel families for TM inference — see README.md in this
+# directory for the family map (clause_eval / clause_matmul / tm_interp /
+# tm_popcount), the Fig 4/5 memory-layout mapping, and when the tuning.py
+# block-size table applies.

@@ -62,6 +62,9 @@ def _tm_interp_kernel(
         emit = last[t] == 1
         bits = ((acc[:, None] >> shifts) & 1).reshape(1, B).astype(jnp.int32)
         contrib = jnp.where(emit, pol[t], 0) * bits  # [1, B]
+        # physical accumulator bound; plan_to_operands(m_cap=...) rejects
+        # out-of-range class ids at program-build time, so this never
+        # silently redirects a malformed program's sums into a live row
         row = jnp.clip(cls[t], 0, sums.shape[0] - 1)
         sums = jax.lax.dynamic_update_slice(
             sums, jax.lax.dynamic_slice(sums, (row, 0), (1, B)) + contrib, (row, 0)

@@ -13,11 +13,18 @@ from .kernel import tm_interp
 
 
 def plan_to_operands(
-    plan: DecodedPlan, i_cap: int
+    plan: DecodedPlan, i_cap: int, m_cap: int | None = None
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Host-side: flatten the plan into per-instruction operand vectors.
 
-    Padded slots AND literal row 0 forever and never emit (last=0)."""
+    Padded slots AND literal row 0 forever and never emit (last=0).
+
+    When ``m_cap`` is given, class ids are validated against the class-sum
+    bank depth HERE, at program-build time: the kernels clamp out-of-range
+    rows (a physical-accumulator bound, like the hardware), which would
+    silently corrupt boundary-row sums on a malformed program.  A bad id
+    raises ``ValueError`` naming the offending instruction instead.
+    """
     n_inc = plan.n_includes
     assert n_inc <= i_cap, f"plan has {n_inc} includes; instruction capacity {i_cap}"
     lit_idx = np.zeros(i_cap, np.int32)
@@ -32,6 +39,17 @@ def plan_to_operands(
         last[:n_inc] = boundary.astype(np.int32)
         pol[:n_inc] = plan.clause_pol[plan.clause_id]
         cls[:n_inc] = plan.clause_class[plan.clause_id]
+        if m_cap is not None:
+            bad = np.flatnonzero(
+                (cls[:n_inc] < 0) | (cls[:n_inc] >= m_cap)
+            )
+            if bad.size:
+                t = int(bad[0])
+                raise ValueError(
+                    f"instruction {t}: class id {int(cls[t])} out of range "
+                    f"for class capacity m_cap={m_cap}; refusing to build a "
+                    f"program that would corrupt the class-sum bank"
+                )
     return lit_idx, last, pol, cls
 
 
@@ -44,7 +62,7 @@ def tm_compressed_class_sums(
     interpret: bool = False,
 ) -> jax.Array:
     """Compressed inference via the Pallas kernel -> int32[m_cap, B]."""
-    lit_idx, last, pol, cls = plan_to_operands(plan, i_cap)
+    lit_idx, last, pol, cls = plan_to_operands(plan, i_cap, m_cap=m_cap)
     return tm_interp(
         jnp.asarray(lit_idx),
         jnp.asarray(last),

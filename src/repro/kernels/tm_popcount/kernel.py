@@ -1,0 +1,252 @@
+"""Pallas TPU kernel: popcount bitplane inference over the decoded plan.
+
+The paper's pitch is that compressed-TM inference is nothing but bitwise
+AND/NOT plus popcount-style summation — yet the interpreter kernel
+(``tm_interp``) expands the packed clause accumulator into ``int32[1, B]``
+bit vectors on EVERY instruction and read-modify-writes the class-sum bank
+with a ``dynamic_slice``/``dynamic_update_slice`` pair per step.  This
+kernel keeps everything packed until one popcount reduction per
+instruction block:
+
+  1. The sequential sweep only ANDs packed ``uint32`` words: per
+     instruction, ``acc &= lits[lit_idx[t]]`` (32 datapoints/lane) and, on
+     a clause boundary, the emitted clause word is stored into a
+     block-local emit buffer (zero when the instruction does not emit).
+     No bit expansion, no sum-bank scatter inside the loop.
+  2. Once per instruction block, the ``[bi, BW]`` emit buffer is
+     bit-transposed in 32x32 tiles (5 masked shift/XOR rounds — the
+     classic bitplane transpose), yielding per-datapoint words whose bit j
+     is clause-output bit of instruction ``32c+j``.
+  3. Class routing is scatter-free: the program is compiled (host-side,
+     at program time) into per-class *polarity-bank* selection bitplanes
+     ``mask_pos/mask_neg[m_cap, I/32]`` — bit j of chunk c selects
+     instruction ``32c+j`` iff it emits a +/- clause of that class.  Class
+     sums are then
+         sums[m, b] += popcount(T[c, b] & mask_pos[m, c])
+                     - popcount(T[c, b] & mask_neg[m, c])
+     via ``jax.lax.population_count`` — the Fig 4.6 accumulate stage as
+     32-way popcounts instead of 32 scalar adds.
+
+Layout mirrors ``tm_interp``: grid = (batch-word blocks [parallel],
+instruction blocks [arbitrary]); the packed clause accumulator and the
+class-sum bank live in VMEM scratch and persist across instruction blocks;
+the packed-literal panel (Feature Memory, Fig 4.5) stays VMEM-resident per
+batch block.  Block shapes default to the measured table in
+``kernels.tuning`` (a per-capacity synthesis-time choice, never a runtime
+recompile).
+
+``tm_popcount_xla`` is the same algorithm phrased as pure XLA ops (gather +
+segmented AND scan + bit transpose + popcount): the portable fast path the
+serving executors use on CPU/GPU, bit-exact with the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..tuning import choose_blocks
+
+ONES = 0xFFFFFFFF  # python int: safe to close over in kernels
+
+# (shift, mask) rounds of the 32x32 bitplane transpose (Hacker's Delight
+# 7-3, vectorized); applied to a reversed word axis so the result follows
+# the little-endian convention used everywhere else in this repo:
+# out word b holds, at bit j, bit b of input word j.
+_TRANSPOSE_ROUNDS = (
+    (16, 0x0000FFFF),
+    (8, 0x00FF00FF),
+    (4, 0x0F0F0F0F),
+    (2, 0x33333333),
+    (1, 0x55555555),
+)
+
+
+def bit_transpose32(x: jax.Array, axis: int) -> jax.Array:
+    """Transpose 32x32 bit tiles held along ``axis`` (size 32) of uint32.
+
+    ``out[..., b, ...]`` has bit j equal to bit b of ``x[..., j, ...]``.
+    Five masked shift/XOR rounds, fully vectorized over all other axes.
+    """
+    x = jnp.moveaxis(x, axis, -1)[..., ::-1]
+    lead = x.shape[:-1]
+    for s, m in _TRANSPOSE_ROUNDS:
+        m = jnp.uint32(m)
+        y = x.reshape(*lead, 32 // (2 * s), 2, s)
+        a, b = y[..., 0, :], y[..., 1, :]
+        t = (a ^ (b >> s)) & m
+        x = jnp.stack([a ^ t, b ^ (t << s)], axis=-2).reshape(*lead, 32)
+    return jnp.moveaxis(x[..., ::-1], -1, axis)
+
+
+def popcount_reduce(
+    emit_words: jax.Array,  # uint32[I, W], I % 32 == 0; 0 unless emitting
+    mask_pos: jax.Array,  # uint32[m_cap, I // 32]
+    mask_neg: jax.Array,  # uint32[m_cap, I // 32]
+) -> jax.Array:
+    """Emit buffer + polarity-bank bitplanes -> int32[m_cap, W*32] sums."""
+    i, w = emit_words.shape
+    planes = bit_transpose32(emit_words.reshape(i // 32, 32, w), axis=1)
+    # planes[c, b, w] bit j = clause-output bit b (datapoint 32w+b) of
+    # instruction 32c+j; select per class with one AND, count with popcount
+    pos = jax.lax.population_count(planes[None] & mask_pos[:, :, None, None])
+    neg = jax.lax.population_count(planes[None] & mask_neg[:, :, None, None])
+    sums = (pos.astype(jnp.int32) - neg.astype(jnp.int32)).sum(axis=1)
+    return sums.transpose(0, 2, 1).reshape(mask_pos.shape[0], w * 32)
+
+
+def _tm_popcount_kernel(
+    lit_idx_ref, last_ref, mask_pos_ref, mask_neg_ref, lits_ref,
+    out_ref, acc_ref, emit_ref, sums_ref,
+):
+    bi = lit_idx_ref.shape[0]
+    bw = lits_ref.shape[1]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.full((1, bw), jnp.uint32(ONES), jnp.uint32)
+        sums_ref[...] = jnp.zeros(sums_ref.shape, jnp.int32)
+
+    lit_idx = lit_idx_ref[...]
+    last = last_ref[...]
+    lits = lits_ref[...]  # [L2, BW] uint32 — Feature Memory panel
+
+    def body(t, acc):
+        word = jax.lax.dynamic_index_in_dim(
+            lits, lit_idx[t], axis=0, keepdims=False
+        )  # [BW] — Literal Select
+        acc = acc & word  # Clause Compute: packed AND, nothing expanded
+        emit = last[t] == 1
+        pl.store(
+            emit_ref,
+            (pl.dslice(t, 1), slice(None)),
+            jnp.where(emit, acc, jnp.uint32(0))[None, :],
+        )
+        return jnp.where(emit, jnp.full_like(acc, jnp.uint32(ONES)), acc)
+
+    acc_ref[...] = jax.lax.fori_loop(0, bi, body, acc_ref[0, :])[None, :]
+    # one bitplane transpose + popcount reduction per instruction block
+    sums_ref[...] += popcount_reduce(
+        emit_ref[...], mask_pos_ref[...], mask_neg_ref[...]
+    )
+    out_ref[...] = sums_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_instructions", "block_words", "interpret")
+)
+def tm_popcount(
+    lit_idx: jax.Array,  # int32[I_cap]  absolute literal slot (padded: 0)
+    last_flag: jax.Array,  # int32[I_cap] 1 = last include of its clause
+    mask_pos: jax.Array,  # uint32[m_cap, ceil(I_cap/32)] +clause selectors
+    mask_neg: jax.Array,  # uint32[m_cap, ceil(I_cap/32)] -clause selectors
+    packed_lits: jax.Array,  # uint32[L2, W]
+    *,
+    block_instructions: int | None = None,
+    block_words: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Popcount-bitplane inference -> int32[m_cap, W*32] class sums.
+
+    Block shapes default to the measured ``kernels.tuning`` table for this
+    capacity point; ``block_instructions`` must be a multiple of 32 (the
+    class masks pack 32 instructions per word).
+    """
+    i_cap = lit_idx.shape[0]
+    m_cap = mask_pos.shape[0]
+    l2, w = packed_lits.shape
+    if block_instructions is not None and block_instructions % 32:
+        raise ValueError(
+            f"block_instructions must be a multiple of 32, got "
+            f"{block_instructions}"
+        )
+    if block_instructions is None or block_words is None:
+        auto_bi, auto_bw = choose_blocks(i_cap, w)
+        block_instructions = block_instructions or auto_bi
+        block_words = block_words or auto_bw
+    # clip to the 32-aligned instruction depth; both operands are 32-aligned
+    bi = max(32, min(block_instructions, -(-i_cap // 32) * 32))
+    bw = min(block_words, w)
+    i_pad = -(-i_cap // bi) * bi
+    w_pad = -(-w // bw) * bw
+
+    def padi(a):  # padded instructions: AND row 0 forever, never emit
+        return jnp.pad(a, (0, i_pad - i_cap))
+
+    lit_idx, last_flag = padi(lit_idx), padi(last_flag)
+    mask_pos, mask_neg = (
+        jnp.pad(m, ((0, 0), (0, i_pad // 32 - m.shape[1])))
+        for m in (mask_pos, mask_neg)
+    )
+    packed_lits = jnp.pad(packed_lits, ((0, 0), (0, w_pad - w)))
+
+    out = pl.pallas_call(
+        _tm_popcount_kernel,
+        grid=(w_pad // bw, i_pad // bi),
+        in_specs=[
+            pl.BlockSpec((bi,), lambda j, i: (i,)),
+            pl.BlockSpec((bi,), lambda j, i: (i,)),
+            pl.BlockSpec((m_cap, bi // 32), lambda j, i: (0, i)),
+            pl.BlockSpec((m_cap, bi // 32), lambda j, i: (0, i)),
+            pl.BlockSpec((l2, bw), lambda j, i: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m_cap, bw * 32), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m_cap, w_pad * 32), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((1, bw), jnp.uint32),  # packed clause accumulator
+            pltpu.VMEM((bi, bw), jnp.uint32),  # block emit buffer
+            pltpu.VMEM((m_cap, bw * 32), jnp.int32),  # class-sum bank
+        ],
+        interpret=interpret,
+    )(lit_idx, last_flag, mask_pos, mask_neg, packed_lits)
+    return out[:, : w * 32]
+
+
+def _segmented_and_scan(sel: jax.Array, start: jax.Array) -> jax.Array:
+    """Inclusive AND scan over axis 0 with resets where ``start`` is True.
+
+    Standard segmented-scan combine — associative, so XLA evaluates it in
+    log2(I) parallel rounds instead of the interpreter's I sequential ones.
+    """
+
+    def combine(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(fb[:, None], vb, va & vb)
+
+    _, acc = jax.lax.associative_scan(combine, (start, sel), axis=0)
+    return acc
+
+
+@jax.jit
+def tm_popcount_xla(
+    lit_idx: jax.Array,  # int32[I_cap]
+    last_flag: jax.Array,  # int32[I_cap]
+    mask_pos: jax.Array,  # uint32[m_cap, ceil(I_cap/32)]
+    mask_neg: jax.Array,  # uint32[m_cap, ceil(I_cap/32)]
+    packed_lits: jax.Array,  # uint32[L2, W]
+) -> jax.Array:
+    """The popcount bitplane algorithm as pure XLA -> int32[m_cap, W*32].
+
+    Bit-exact with ``tm_popcount``; this is what the serving executors run
+    off-TPU (Pallas interpret mode emulates the grid and is far slower than
+    native XLA on CPU).
+    """
+    i_cap = lit_idx.shape[0]
+    i_pad = -(-i_cap // 32) * 32
+    lit_idx = jnp.pad(lit_idx, (0, i_pad - i_cap))
+    last_flag = jnp.pad(last_flag, (0, i_pad - i_cap))
+    pad_chunks = i_pad // 32 - mask_pos.shape[1]
+    mask_pos = jnp.pad(mask_pos, ((0, 0), (0, pad_chunks)))
+    mask_neg = jnp.pad(mask_neg, ((0, 0), (0, pad_chunks)))
+
+    sel = jnp.take(packed_lits, lit_idx, axis=0)  # [I, W] literal select
+    emit = last_flag == 1
+    start = jnp.concatenate([jnp.ones((1,), bool), emit[:-1]])
+    acc = _segmented_and_scan(sel, start)  # packed clause outputs
+    emit_words = jnp.where(emit[:, None], acc, jnp.uint32(0))
+    return popcount_reduce(emit_words, mask_pos, mask_neg)

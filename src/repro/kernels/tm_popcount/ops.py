@@ -1,0 +1,115 @@
+"""Host-side program build for the popcount bitplane path.
+
+``DecodedPlan -> (lit_idx, last, mask_pos, mask_neg)``: the per-include
+operand vectors of the interpreter path, plus the per-class polarity-bank
+selection bitplanes the popcount reduction keys on.  This is where a
+malformed program is REJECTED: a class id outside the accumulator bank or
+a literal slot outside the feature memory raises ``ValueError`` naming the
+offending instruction, instead of silently clamping into class 0 / row 0
+at execution time.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.compress import DecodedPlan
+from ..tm_interp.ops import plan_to_operands
+from .kernel import tm_popcount, tm_popcount_xla
+
+
+def pack_class_masks(
+    last: np.ndarray,  # int32[I_cap] 1 = clause boundary (emit)
+    pol: np.ndarray,  # int32[I_cap] +1/-1, read where last == 1
+    cls: np.ndarray,  # int32[I_cap] class id, read where last == 1
+    m_cap: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Emit metadata -> packed polarity banks uint32[m_cap, ceil(I/32)].
+
+    Bit j of chunk c in ``mask_pos[m]`` selects instruction ``32c + j``
+    iff it emits a positive clause of class m (``mask_neg`` likewise for
+    negative clauses).  Raises on class ids outside ``[0, m_cap)`` at an
+    emitting instruction — the program-build-time guard that replaces the
+    execution-time clamp.
+    """
+    last = np.asarray(last)
+    i_cap = last.shape[0]
+    emitting = np.flatnonzero(last == 1)
+    bad = emitting[(cls[emitting] < 0) | (cls[emitting] >= m_cap)]
+    if bad.size:
+        t = int(bad[0])
+        raise ValueError(
+            f"instruction {t}: class id {int(cls[t])} out of range for "
+            f"class capacity m_cap={m_cap}; refusing to build a program "
+            f"that would corrupt the class-sum bank"
+        )
+    n_chunks = -(-i_cap // 32) * 32 // 32
+    mask_pos = np.zeros((m_cap, n_chunks), np.uint32)
+    mask_neg = np.zeros((m_cap, n_chunks), np.uint32)
+    bit = (np.uint32(1) << (emitting % 32).astype(np.uint32))
+    chunk = emitting // 32
+    for bank, sign in ((mask_pos, 1), (mask_neg, -1)):
+        sel = pol[emitting] == sign
+        np.bitwise_or.at(bank, (cls[emitting][sel], chunk[sel]), bit[sel])
+    return mask_pos, mask_neg
+
+
+def plan_to_popcount_operands(
+    plan: DecodedPlan, i_cap: int, m_cap: int, *, l2_cap: int | None = None
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flatten + validate the plan into popcount-kernel operands.
+
+    Reuses the interpreter's operand flattening, bounds-checks literal
+    slots against ``l2_cap`` when given, and packs the class masks —
+    ``pack_class_masks`` owns the class-capacity validation (emitting
+    instructions are the only ones the popcount routing ever reads).
+    """
+    lit_idx, last, pol, cls = plan_to_operands(plan, i_cap)
+    if l2_cap is not None and plan.n_includes > 0:
+        bad = np.flatnonzero(
+            (lit_idx[: plan.n_includes] < 0)
+            | (lit_idx[: plan.n_includes] >= l2_cap)
+        )
+        if bad.size:
+            t = int(bad[0])
+            raise ValueError(
+                f"instruction {t}: literal slot {int(lit_idx[t])} out of "
+                f"range for feature memory depth {l2_cap}"
+            )
+    mask_pos, mask_neg = pack_class_masks(last, pol, cls, m_cap)
+    return lit_idx, last, mask_pos, mask_neg
+
+
+def tm_popcount_class_sums(
+    plan: DecodedPlan,
+    packed_lits: jax.Array,  # uint32[2F, W] (interleaved literal rows)
+    *,
+    m_cap: int,
+    i_cap: int,
+    implementation: str = "pallas",
+    interpret: bool = False,
+) -> jax.Array:
+    """Compressed inference via the popcount path -> int32[m_cap, B].
+
+    ``implementation='pallas'`` runs the Pallas kernel (pass
+    ``interpret=True`` off-TPU); ``'xla'`` runs the bit-exact pure-XLA
+    formulation (the portable serving fast path).
+    """
+    lit_idx, last, mask_pos, mask_neg = plan_to_popcount_operands(
+        plan, i_cap, m_cap, l2_cap=int(packed_lits.shape[0])
+    )
+    args = (
+        jnp.asarray(lit_idx), jnp.asarray(last),
+        jnp.asarray(mask_pos), jnp.asarray(mask_neg), packed_lits,
+    )
+    if implementation == "pallas":
+        return tm_popcount(*args, interpret=interpret)
+    if implementation == "xla":
+        return tm_popcount_xla(*args)
+    raise ValueError(
+        f"unknown implementation {implementation!r}; choose 'pallas' or 'xla'"
+    )

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the popcount bitplane kernel.
+
+Deliberately naive: one instruction per ``lax.scan`` step, reading the
+class routing straight out of the packed polarity-bank bitplanes (bit j of
+mask chunk ``t // 32`` selects instruction t), expanding the clause word
+and scatter-adding — i.e. none of the kernel's tricks.  Used to prove the
+mask encoding and the block-parallel reduction independently; the kernel
+itself is additionally proven against ``tm_interp/ref.py`` (same class
+sums from the pol/cls operand encoding) in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tm_popcount_ref(
+    lit_idx: jax.Array,  # int32[I]  literal slot per include
+    last_flag: jax.Array,  # int32[I] 1 = last include of its clause
+    mask_pos: jax.Array,  # uint32[m_cap, ceil(I/32)]
+    mask_neg: jax.Array,  # uint32[m_cap, ceil(I/32)]
+    packed_lits: jax.Array,  # uint32[L2, W]
+) -> jax.Array:
+    """Sequential oracle -> int32[m_cap, W*32] class sums."""
+    m_cap = mask_pos.shape[0]
+    _, w = packed_lits.shape
+    B = w * 32
+    ones = jnp.uint32(0xFFFFFFFF)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def unpack(acc):  # uint32[W] -> int32[B]
+        return ((acc[:, None] >> shifts) & 1).reshape(B).astype(jnp.int32)
+
+    def step(carry, t):
+        acc, sums = carry
+        acc = acc & packed_lits[lit_idx[t]]
+        chunk, bit = t // 32, (t % 32).astype(jnp.uint32)
+        sel_pos = ((mask_pos[:, chunk] >> bit) & 1).astype(jnp.int32)
+        sel_neg = ((mask_neg[:, chunk] >> bit) & 1).astype(jnp.int32)
+        emit = last_flag[t] == 1
+        gate = jnp.where(emit, sel_pos - sel_neg, 0)  # int32[m_cap]
+        sums = sums + gate[:, None] * unpack(acc)[None, :]
+        acc = jnp.where(emit, jnp.full_like(acc, ones), acc)
+        return (acc, sums), None
+
+    acc0 = jnp.full((w,), ones, jnp.uint32)
+    sums0 = jnp.zeros((m_cap, B), jnp.int32)
+    (_, sums), _ = jax.lax.scan(
+        step, (acc0, sums0), jnp.arange(lit_idx.shape[0])
+    )
+    return sums

@@ -1,0 +1,147 @@
+"""Static block-size autotuner for the compressed-TM Pallas kernels.
+
+The kernels in this package tile their grids with two knobs:
+
+  * ``block_instructions`` — instruction-memory rows per grid step (the
+    sequential "K-loop" depth; must be a multiple of 32 for the popcount
+    bitplane reduction, whose class masks are packed 32 instructions/word);
+  * ``block_words``        — 32-datapoint feature words per grid step (the
+    parallel batch tile).
+
+The right choice depends only on the *capacity* point (instruction depth x
+batch words) — a synthesis-time property, never on runtime model contents —
+so a small measured table is enough: no search at trace time, no cache
+misses at serve time.  ``DEFAULT_TABLE`` was measured with
+``measure_blocks`` over the tm_popcount kernel (interpret mode on the CPU
+container; re-measure on real TPU hardware with ``python -m
+repro.kernels.tuning``).  Rows are matched first-fit, so keep them sorted
+from smallest to largest capacity.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence, Tuple
+
+BlockChoice = Tuple[int, int]  # (block_instructions, block_words)
+
+# (max_instructions, max_words) -> (block_instructions, block_words);
+# ``None`` bounds match anything (the final row is the fallback).
+DEFAULT_TABLE: Tuple[Tuple[Optional[int], Optional[int], int, int], ...] = (
+    # measured 2026-07 (CPU interpret, python -m repro.kernels.tuning):
+    # deep word tiles amortize the per-block bitplane transpose; small
+    # instruction blocks win only at shallow instruction depths
+    (256, 1, 128, 1),
+    (256, None, 256, 4),
+    (1024, 2, 256, 2),
+    (1024, None, 512, 8),
+    (4096, 4, 256, 4),
+    (None, None, 512, 8),
+)
+
+
+def _ceil32(n: int) -> int:
+    return max(32, -(-n // 32) * 32)
+
+
+def choose_blocks(
+    n_instructions: int,
+    n_words: int,
+    table: Sequence[Tuple[Optional[int], Optional[int], int, int]] = DEFAULT_TABLE,
+) -> BlockChoice:
+    """Pick ``(block_instructions, block_words)`` for a capacity point.
+
+    First-fit over ``table``; the returned block_instructions is clipped to
+    the (32-aligned) instruction depth and block_words to the word count,
+    so the caller can pass the choice straight to the kernel.
+    """
+    if n_instructions <= 0 or n_words <= 0:
+        raise ValueError(
+            f"capacity must be positive, got {n_instructions} instructions "
+            f"x {n_words} words"
+        )
+    for max_i, max_w, bi, bw in table:
+        if (max_i is None or n_instructions <= max_i) and (
+            max_w is None or n_words <= max_w
+        ):
+            return min(bi, _ceil32(n_instructions)), min(bw, n_words)
+    # defensive: a table without a (None, None) fallback row
+    return min(512, _ceil32(n_instructions)), min(4, n_words)
+
+
+def measure_blocks(
+    n_instructions: int,
+    n_words: int,
+    *,
+    candidates: Iterable[BlockChoice] = (
+        (128, 1), (128, 2), (256, 1), (256, 2), (256, 4),
+        (512, 1), (512, 2), (512, 4), (512, 8),
+    ),
+    m_cap: int = 16,
+    l2: int = 256,
+    repeats: int = 10,
+    interpret: bool = True,
+    seed: int = 0,
+) -> Tuple[BlockChoice, dict]:
+    """Time the tm_popcount kernel per candidate block shape at one
+    capacity point -> (best choice, {choice: median_seconds}).
+
+    Used offline to (re)generate ``DEFAULT_TABLE``; not called on any hot
+    path.  ``interpret=True`` measures the CPU emulation — only relative
+    ordering is meaningful there; on a TPU pass ``interpret=False``.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .tm_popcount.kernel import tm_popcount
+
+    rng = np.random.default_rng(seed)
+    i_cap = _ceil32(n_instructions)
+    lit_idx = rng.integers(0, l2, i_cap).astype(np.int32)
+    last = (rng.random(i_cap) < 0.25).astype(np.int32)
+    n_chunks = i_cap // 32
+    mask_pos = rng.integers(0, 2**32, (m_cap, n_chunks), dtype=np.uint32)
+    mask_neg = (~mask_pos).astype(np.uint32)
+    lits = rng.integers(0, 2**32, (l2, n_words), dtype=np.uint32)
+    args = tuple(
+        jnp.asarray(a) for a in (lit_idx, last, mask_pos, mask_neg, lits)
+    )
+
+    timings: dict = {}
+    for bi, bw in candidates:
+        if bi > i_cap or bw > n_words:
+            continue
+        fn = lambda: tm_popcount(  # noqa: E731
+            *args, block_instructions=bi, block_words=bw, interpret=interpret
+        )
+        jax.block_until_ready(fn())  # compile outside the window
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        timings[(bi, bw)] = float(np.median(ts))
+    if not timings:
+        raise ValueError(
+            f"no candidate block shape fits {n_instructions} instructions "
+            f"x {n_words} words"
+        )
+    best = min(timings, key=timings.get)
+    return best, timings
+
+
+def _main() -> None:  # pragma: no cover - offline table regeneration
+    points = [(256, 1), (256, 4), (1024, 2), (1024, 8), (4096, 4)]
+    print("capacity (instructions x words) -> best (bi, bw)  [median us]")
+    for i_cap, w in points:
+        best, timings = measure_blocks(i_cap, w)
+        print(
+            f"  ({i_cap:5d}, {w}) -> {best}  "
+            f"[{', '.join(f'{k}={v * 1e6:.0f}' for k, v in sorted(timings.items()))}]"
+        )
+
+
+if __name__ == "__main__":  # pragma: no cover
+    _main()

@@ -1,8 +1,9 @@
 """Multi-tenant batched serving over the runtime-tunable TM accelerator.
 
 Layers:
-  executors.py   ServeCapacity + the three engine backends
-                 (interp / plan / sharded), one private jit cache each
+  executors.py   ServeCapacity + the four engine backends
+                 (interp / plan / sharded / popcount), one private jit
+                 cache each
   batching.py    request queue, 32-datapoint-word coalescing, demux
   registry.py    named model slots with hot-swap (Fig-8 recalibration)
   metrics.py     latency/throughput instrumentation
@@ -14,6 +15,7 @@ from .executors import (
     BACKENDS,
     InterpExecutor,
     PlanExecutor,
+    PopcountExecutor,
     ServeCapacity,
     ShardedExecutor,
     make_executor,
@@ -28,6 +30,7 @@ __all__ = [
     "InterpExecutor",
     "ModelRegistry",
     "PlanExecutor",
+    "PopcountExecutor",
     "RequestHandle",
     "ServeCapacity",
     "ServeMetrics",

@@ -110,27 +110,50 @@ class Batcher:
     def pending_rows(self, slot: str) -> int:
         return sum(p.remaining for p in self._queues.get(slot, ()))
 
-    def next_batch(self, slot: str) -> Tuple[np.ndarray, List[Span]]:
+    def next_batch(
+        self, slot: str, out: Optional[np.ndarray] = None
+    ) -> Tuple[np.ndarray, List[Span]]:
         """Pop up to ``batch_capacity`` rows off the slot's queue.
 
-        Returns the concatenated feature block plus the spans needed to
-        demux predictions back per-request.  Raises on an empty queue.
+        Returns the coalesced feature block plus the spans needed to demux
+        predictions back per-request.  Raises on an empty queue.
+
+        With ``out`` (an engine staging array of at least
+        ``[batch_capacity, F]``), request rows are packed straight into it
+        — no per-batch concatenate/allocation — the remainder of ``out``
+        is zeroed (the engines consume one fixed zero-padded operand
+        shape), and the returned block is the view ``out[:rows, :F]``.
         """
         q = self._queues.get(slot)
         if not q:
             raise ValueError(f"no pending requests for slot {slot!r}")
+        n_features = q[0].x.shape[1]
+        if out is not None:
+            if (out.shape[0] < self.batch_capacity
+                    or out.shape[1] < n_features):
+                raise ValueError(
+                    f"staging array {out.shape} too small for "
+                    f"{self.batch_capacity} rows x {n_features} features"
+                )
+            out.fill(0)
         parts: List[np.ndarray] = []
         spans: List[Span] = []
         rows = 0
         while q and rows < self.batch_capacity:
             p = q[0]
             take = min(p.remaining, self.batch_capacity - rows)
-            parts.append(p.x[p.offset : p.offset + take])
+            block = p.x[p.offset : p.offset + take]
+            if out is None:
+                parts.append(block)
+            else:
+                out[rows : rows + take, :n_features] = block
             spans.append((p.handle, rows, rows + take, p.offset))
             rows += take
             p.offset += take
             if p.remaining == 0:
                 q.popleft()
+        if out is not None:
+            return out[:rows, :n_features], spans
         return np.concatenate(parts, axis=0), spans
 
     @staticmethod

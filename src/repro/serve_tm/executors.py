@@ -12,27 +12,42 @@ Three engines over the same ``CompressedModel``, one shared contract:
 
 Backends:
 
-  * ``interp``  — the paper-faithful stream interpreter
+  * ``interp``   — the paper-faithful stream interpreter
     (``core.interp.interpret_stream``): one instruction per scan step over
     the fixed-depth instruction memory.
-  * ``plan``    — the decoded-plan fast path
+  * ``plan``     — the decoded-plan fast path
     (``core.interp.plan_class_sums``): gather + segmented reduction,
     parallel across includes and datapoints.
-  * ``sharded`` — the ``dist.tm_sharded`` clause-major shard_map executor
+  * ``sharded``  — the ``dist.tm_sharded`` clause-major shard_map executor
     (classes over ``model``, batch over the data axes); on a 1x1 mesh this
     is the single-device realization of the Fig-7 multi-core split.
+  * ``popcount`` — the popcount bitplane fast path
+    (``kernels.tm_popcount``): clause outputs stay packed ``uint32`` until
+    a clause boundary; class sums come from ``lax.population_count``
+    against per-class polarity-bank selection bitplanes.  Pallas kernel on
+    TPU, the bit-exact pure-XLA twin elsewhere.
 
-All three are bit-exact against the ``core.tm.batch_class_sums`` oracle
+All four are bit-exact against the ``core.tm.batch_class_sums`` oracle
 (enforced by tests/test_serve_tm.py).  Every executor instance owns a
 PRIVATE jit cache (a fresh closure over the underlying function), so
 ``compile_cache_size()`` counts only this engine's compilations — the
 module-level jit caches of interp.py are shared process-wide and would
 make the ==1 assertion meaningless under parallel test traffic.
+
+Serving buffers are device-resident: ``program()`` moves the decoded
+program to the accelerator ONCE (``jax.device_put``); per-flush features
+are packed by the batcher straight into a preallocated host staging array
+(``_ExecutorBase.staging``) instead of a fresh ``np.pad`` per call, and
+the popcount backend donates its per-call device copy of that staging
+block back to XLA (``donate_argnums``) so flushes never accumulate live
+feature buffers.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from typing import Any, Dict
 
 import jax
@@ -42,12 +57,21 @@ import numpy as np
 from ..configs.base import _pad_to
 from ..core.compress import CompressedModel, decode_to_plan
 from ..core.interp import interpret_stream, pack_features, pad_plan, plan_class_sums
-from ..core.tm import literals
+from ..core.tm import literals, pack_literals
 from ..dist.sharding import _axis_sizes
 from ..dist.tm_sharded import (
     TMShardedConfig,
     build_tm_sharded,
     fill_clause_tables,
+)
+from ..kernels.tm_popcount.kernel import tm_popcount, tm_popcount_xla
+from ..kernels.tm_popcount.ops import plan_to_popcount_operands
+from ..kernels.tuning import choose_blocks
+
+# buffer donation is an optimization hint; off-TPU XLA may decline it and
+# warn — that is expected on the CPU test/CI containers, not actionable
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
 )
 
 
@@ -97,22 +121,49 @@ class _ExecutorBase:
 
     def __init__(self, capacity: ServeCapacity):
         self.capacity = capacity
+        self._staging: np.ndarray | None = None
 
     def compile_cache_size(self) -> int:
         return self._fn._cache_size()
 
+    @property
+    def staging(self) -> np.ndarray:
+        """The engine's preallocated [batch_capacity, feature_capacity]
+        uint8 feature staging array.  The batcher packs request rows
+        straight into it (``Batcher.next_batch(out=...)``) and the engines
+        consume it as their one fixed operand shape — no per-flush host
+        allocation."""
+        if self._staging is None:
+            c = self.capacity
+            self._staging = np.zeros(
+                (c.batch_capacity, c.feature_capacity), np.uint8
+            )
+        return self._staging
+
     def _pad_x(self, x: np.ndarray) -> np.ndarray:
-        """{0,1}[B, F] -> [batch_capacity, feature_capacity] (zero-padded)
-        so every engine call presents one fixed operand shape."""
+        """{0,1}[B, F] -> the staging array (zero-padded to capacity).
+
+        When ``x`` is already a view of ``self.staging`` (the batcher
+        packed it there), it is returned as-is — zero copies."""
         c = self.capacity
         B, F = x.shape
         _check(B <= c.batch_capacity, "batch", B, c.batch_capacity,
                "batch_words")
         _check(F <= c.feature_capacity, "n_features", F, c.feature_capacity,
                "feature_capacity")
-        xp = np.zeros((c.batch_capacity, c.feature_capacity), np.uint8)
-        xp[:B, :F] = x
-        return xp
+        st = self.staging
+        if np.shares_memory(x, st):
+            if (x.__array_interface__["data"][0]
+                    == st.__array_interface__["data"][0]):
+                # a leading view — the batcher packed rows [0, B) in place
+                # and zeroed the remainder (next_batch(out=) contract)
+                return st
+            # any other overlapping view would be corrupted by the zero
+            # fill below; detach it first
+            x = np.array(x)
+        st.fill(0)
+        st[:B, :F] = x
+        return st
 
 
 class InterpExecutor(_ExecutorBase):
@@ -203,6 +254,100 @@ class PlanExecutor(_ExecutorBase):
         return np.asarray(sums)[:B, : prog["n_classes"]]
 
 
+def _popcount_engine_xla(lit_idx, last, mask_pos, mask_neg, x_staged):
+    """Staged features -> packed interleaved literals -> popcount sums."""
+    return tm_popcount_xla.__wrapped__(
+        lit_idx, last, mask_pos, mask_neg, pack_literals(x_staged)
+    )
+
+
+def _popcount_engine_pallas(
+    lit_idx, last, mask_pos, mask_neg, x_staged,
+    *, block_instructions, block_words, interpret,
+):
+    return tm_popcount.__wrapped__(
+        lit_idx, last, mask_pos, mask_neg, pack_literals(x_staged),
+        block_instructions=block_instructions, block_words=block_words,
+        interpret=interpret,
+    )
+
+
+class PopcountExecutor(_ExecutorBase):
+    """Popcount bitplane executor (kernels/tm_popcount): packed clause
+    words end-to-end, class sums via ``lax.population_count`` against the
+    program's polarity-bank selection bitplanes.
+
+    The program (operand vectors + class masks) is pushed to the device
+    ONCE at ``program()`` (``jax.device_put``); each engine call ships only
+    the staging block, donated to XLA so the feature buffer is recycled
+    across flushes rather than accumulating.
+    """
+
+    name = "popcount"
+
+    def __init__(self, capacity: ServeCapacity, implementation: str | None = None):
+        super().__init__(capacity)
+        if implementation is None:
+            # the Pallas kernel is the TPU artifact; its interpret-mode
+            # emulation loses to the bit-exact XLA twin everywhere else
+            implementation = (
+                "pallas" if jax.default_backend() == "tpu" else "xla"
+            )
+        if implementation not in ("pallas", "xla"):
+            raise ValueError(
+                f"unknown implementation {implementation!r}; "
+                f"choose 'pallas' or 'xla'"
+            )
+        self.implementation = implementation
+        if implementation == "pallas":
+            bi, bw = choose_blocks(
+                capacity.instruction_capacity, capacity.batch_words
+            )
+            engine = functools.partial(
+                _popcount_engine_pallas,
+                block_instructions=bi, block_words=bw,
+                interpret=jax.default_backend() != "tpu",
+            )
+        else:
+            engine = _popcount_engine_xla
+        self._fn = _private_jit(engine, donate_argnums=(4,))
+
+    def program(self, model: CompressedModel) -> Dict[str, Any]:
+        c = self.capacity
+        _check(model.n_classes <= c.class_capacity, "n_classes",
+               model.n_classes, c.class_capacity, "class_capacity")
+        _check(model.n_features <= c.feature_capacity, "n_features",
+               model.n_features, c.feature_capacity, "feature_capacity")
+        plan = decode_to_plan(model)
+        _check(plan.n_includes <= c.instruction_capacity, "n_includes",
+               plan.n_includes, c.instruction_capacity,
+               "instruction_capacity")
+        lit_idx, last, mask_pos, mask_neg = plan_to_popcount_operands(
+            plan, c.instruction_capacity, c.class_capacity,
+            l2_cap=2 * c.feature_capacity,
+        )
+        # the reprogram is pure data movement: resident on-device until the
+        # next swap, never retraced (fixed capacity shapes)
+        return {
+            "lit_idx": jax.device_put(lit_idx),
+            "last": jax.device_put(last),
+            "mask_pos": jax.device_put(mask_pos),
+            "mask_neg": jax.device_put(mask_neg),
+            "n_classes": model.n_classes,
+            "n_features": model.n_features,
+        }
+
+    def class_sums(self, prog: Dict[str, Any], x: np.ndarray) -> np.ndarray:
+        B = x.shape[0]
+        # fresh device copy of the staging block; the engine donates it
+        staged = jnp.asarray(self._pad_x(x))
+        sums = self._fn(
+            prog["lit_idx"], prog["last"],
+            prog["mask_pos"], prog["mask_neg"], staged,
+        )
+        return np.asarray(sums)[: prog["n_classes"], :B].T
+
+
 class ShardedExecutor(_ExecutorBase):
     """dist.tm_sharded clause-major executor on a (data, model) mesh.
 
@@ -226,7 +371,11 @@ class ShardedExecutor(_ExecutorBase):
             include_cap=capacity.include_capacity,
         )
         fn, _ = build_tm_sharded(cfg, mesh)
-        self._fn = jax.jit(fn)  # fn is a fresh closure: private cache
+        # route through _private_jit like every other backend so the
+        # compile_cache_size() == 1 contract is enforced uniformly (a bare
+        # jax.jit over the closure worked, but only by accident of
+        # build_tm_sharded returning a fresh callable)
+        self._fn = _private_jit(fn)
         self._Mp = _pad_to(
             capacity.class_capacity, _axis_sizes(mesh).get("model", 1)
         )
@@ -271,13 +420,14 @@ BACKENDS = {
     "interp": InterpExecutor,
     "plan": PlanExecutor,
     "sharded": ShardedExecutor,
+    "popcount": PopcountExecutor,
 }
 
 
 def make_executor(
     backend: str | _ExecutorBase, capacity: ServeCapacity, mesh=None
 ) -> _ExecutorBase:
-    """'interp' | 'plan' | 'sharded' (or an already-built instance)."""
+    """'interp' | 'plan' | 'sharded' | 'popcount' (or a built instance)."""
     if isinstance(backend, _ExecutorBase):
         return backend
     if backend not in BACKENDS:

@@ -127,7 +127,11 @@ class TMServer:
     def _flush_slot(self, slot: str) -> None:
         entry = self.registry.get(slot)
         while self.batcher.pending_rows(slot):
-            X, spans = self.batcher.next_batch(slot)
+            # pack rows straight into the engine's staging array: the
+            # flush path performs no per-batch feature allocation
+            X, spans = self.batcher.next_batch(
+                slot, out=self.executor.staging
+            )
             t0 = time.perf_counter()
             sums = self.executor.class_sums(entry.program, X)
             dt = time.perf_counter() - t0

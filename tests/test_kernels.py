@@ -16,6 +16,17 @@ from repro.kernels.tm_interp.ops import (
     plan_to_operands,
 )
 from repro.kernels.tm_interp.ref import tm_interp_ref
+from repro.kernels.tm_popcount.kernel import (
+    bit_transpose32,
+    tm_popcount,
+    tm_popcount_xla,
+)
+from repro.kernels.tm_popcount.ops import (
+    plan_to_popcount_operands,
+    tm_popcount_class_sums,
+)
+from repro.kernels.tm_popcount.ref import tm_popcount_ref
+from repro.kernels.tuning import DEFAULT_TABLE, choose_blocks
 
 rng = np.random.default_rng(11)
 
@@ -105,6 +116,119 @@ def test_tm_interp_kernel_vs_ref_module():
                       block_instructions=64, block_words=1, interpret=True)
     out_r = tm_interp_ref(*args, jnp.asarray(lits), m_cap=M)
     assert (np.asarray(out_k) == np.asarray(out_r)).all()
+
+
+def test_bit_transpose32_spec_and_involution():
+    """out[b] bit j == in[j] bit b; applying twice is the identity."""
+    x = rng.integers(0, 2**32, (3, 32, 2), dtype=np.uint32)
+    y = np.asarray(bit_transpose32(jnp.asarray(x), axis=1))
+    for b in range(32):
+        for j in range(32):
+            assert ((y[:, b, :] >> j) & 1 == (x[:, j, :] >> b) & 1).all()
+    z = np.asarray(bit_transpose32(jnp.asarray(y), axis=1))
+    assert (z == x).all()
+
+
+@pytest.mark.parametrize(
+    "M,C,F,B,bi,bw",
+    [
+        (4, 12, 25, 64, 64, 1),
+        (3, 8, 100, 32, 128, 1),
+        (6, 20, 60, 128, 96, 2),
+        (2, 4, 10, 96, 32, 4),  # word blocking
+        (5, 6, 33, 32, 64, 1),  # i_cap not 32-aligned (padding path)
+    ],
+)
+def test_tm_popcount_kernel_vs_oracle(M, C, F, B, bi, bw):
+    """Pallas kernel == XLA twin == mask-domain ref == tm_interp ref ==
+    dense oracle, over the full encode->plan->operand pipeline."""
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = rng.random((M, C, 2 * F)) < 0.08
+    X = rng.integers(0, 2, (B, F)).astype(np.uint8)
+    state = jnp.where(jnp.asarray(acts), cfg.n_states + 1, cfg.n_states)
+    oracle = np.asarray(batch_class_sums(cfg, state, jnp.asarray(X)))
+    plan = decode_to_plan(encode(cfg, np.asarray(acts)))
+    lits = pack_interleaved_literals(jnp.asarray(X))
+    i_cap = max(bi, -(-max(plan.n_includes, 1) // bi) * bi) + 7  # unaligned
+    m_cap = 8
+    ops = plan_to_popcount_operands(
+        plan, i_cap, m_cap, l2_cap=int(lits.shape[0])
+    )
+    args = tuple(jnp.asarray(a) for a in ops) + (lits,)
+    out_k = np.asarray(tm_popcount(
+        *args, block_instructions=bi, block_words=bw, interpret=True
+    ))
+    out_x = np.asarray(tm_popcount_xla(*args))
+    out_r = np.asarray(tm_popcount_ref(*args))
+    li, la, po, cl = plan_to_operands(plan, i_cap, m_cap=m_cap)
+    out_i = np.asarray(tm_interp_ref(
+        jnp.asarray(li), jnp.asarray(la), jnp.asarray(po), jnp.asarray(cl),
+        lits, m_cap=m_cap,
+    ))
+    assert (out_k[:M, :B].T == oracle).all()
+    assert (out_x == out_k).all()
+    assert (out_r == out_k).all()
+    assert (out_i == out_k).all()
+
+
+def test_tm_popcount_autotuned_blocks_and_ops_entrypoint():
+    """Default (table-chosen) blocks and both implementations agree."""
+    cfg = TMConfig(n_classes=3, n_clauses=10, n_features=48)
+    acts = rng.random((3, 10, 96)) < 0.1
+    X = rng.integers(0, 2, (64, 48)).astype(np.uint8)
+    plan = decode_to_plan(encode(cfg, np.asarray(acts)))
+    lits = pack_interleaved_literals(jnp.asarray(X))
+    a = tm_popcount_class_sums(
+        plan, lits, m_cap=4, i_cap=512, implementation="pallas",
+        interpret=True,
+    )
+    b = tm_popcount_class_sums(
+        plan, lits, m_cap=4, i_cap=512, implementation="xla"
+    )
+    assert (np.asarray(a) == np.asarray(b)).all()
+    with pytest.raises(ValueError, match="implementation"):
+        tm_popcount_class_sums(plan, lits, m_cap=4, i_cap=512,
+                               implementation="cuda")
+
+
+def test_tm_popcount_all_excluded_is_zero():
+    cfg = TMConfig(n_classes=4, n_clauses=6, n_features=16)
+    plan = decode_to_plan(encode(cfg, np.zeros((4, 6, 32), bool)))
+    lits = jnp.full((32, 2), 0xFFFFFFFF, jnp.uint32)
+    out = tm_popcount_class_sums(plan, lits, m_cap=4, i_cap=64,
+                                 implementation="xla")
+    assert (np.asarray(out) == 0).all()
+
+
+def test_program_build_rejects_out_of_range_class_ids():
+    """The satellite bugfix: a malformed program must raise at build time
+    (naming the instruction), never silently clamp into a live sum row."""
+    cfg = TMConfig(n_classes=4, n_clauses=4, n_features=8)
+    acts = rng.random((4, 4, 16)) < 0.3
+    plan = decode_to_plan(encode(cfg, np.asarray(acts)))
+    with pytest.raises(ValueError, match=r"instruction \d+: class id"):
+        plan_to_operands(plan, 128, m_cap=2)
+    with pytest.raises(ValueError, match=r"instruction \d+: class id"):
+        plan_to_popcount_operands(plan, 128, 2)
+    with pytest.raises(ValueError, match=r"literal slot"):
+        plan_to_popcount_operands(plan, 128, 8, l2_cap=4)
+    # in-range capacities still build
+    plan_to_operands(plan, 128, m_cap=4)
+    plan_to_popcount_operands(plan, 128, 4, l2_cap=16)
+
+
+def test_choose_blocks_table():
+    for n_inst, n_words in [(32, 1), (100, 3), (512, 2), (4096, 4),
+                            (10000, 16)]:
+        bi, bw = choose_blocks(n_inst, n_words)
+        assert bi % 32 == 0 and bi >= 32
+        assert 1 <= bw <= n_words
+        assert bi <= -(-n_inst // 32) * 32
+    # first-fit honors the measured table rows
+    assert choose_blocks(256, 1) == (128, 1)
+    assert choose_blocks(4096, 4, table=DEFAULT_TABLE) == (256, 4)
+    with pytest.raises(ValueError, match="positive"):
+        choose_blocks(0, 4)
 
 
 @pytest.mark.parametrize(

@@ -11,7 +11,7 @@ from repro.core import TMConfig, batch_class_sums, state_from_actions
 from repro.core.compress import encode
 from repro.serve_tm import Batcher, RequestHandle, ServeCapacity, TMServer
 
-BACKENDS = ("interp", "plan", "sharded")
+BACKENDS = ("interp", "plan", "sharded", "popcount")
 
 CAP = ServeCapacity(
     instruction_capacity=1024, feature_capacity=128, class_capacity=16,
@@ -164,6 +164,65 @@ def test_metrics_summary():
     assert s["throughput_dps"] > 0
     assert {"p50", "p95", "p99"} <= set(s["engine_us"])
     assert s["request_latency_us"]["p50"] > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_private_jit_cache_per_executor(backend):
+    """Two live engines of the SAME backend must count compilations
+    independently (the compile_cache_size()==1 contract is per instance
+    — this is what _private_jit guarantees, now including sharded)."""
+    rng = np.random.default_rng(8)
+    servers = [TMServer(CAP, backend=backend) for _ in range(2)]
+    for i, server in enumerate(servers):
+        cfg, acts, model = _random_model(rng, 3 + i, 8, 24 + 8 * i)
+        server.register("m", model)
+        x = rng.integers(0, 2, (9, cfg.n_features)).astype(np.uint8)
+        assert (
+            server.infer("m", x) == _oracle_sums(cfg, acts, x).argmax(1)
+        ).all()
+    for server in servers:
+        assert server.compile_cache_size() == 1
+    assert servers[0].executor._fn is not servers[1].executor._fn
+
+
+def test_staging_buffer_is_reused_across_flushes():
+    """The flush path packs requests straight into the engine's
+    preallocated staging array — no per-batch feature allocation."""
+    rng = np.random.default_rng(9)
+    cfg, acts, model = _random_model(rng, 4, 10, 32)
+    server = TMServer(CAP, backend="popcount")
+    server.register("m", model)
+    staging = server.executor.staging
+    assert staging.shape == (CAP.batch_capacity, CAP.feature_capacity)
+    for _ in range(3):
+        x = rng.integers(0, 2, (11, 32)).astype(np.uint8)
+        assert (
+            server.infer("m", x) == _oracle_sums(cfg, acts, x).argmax(1)
+        ).all()
+        # same preallocated buffer, zero-padded beyond the request rows
+        assert server.executor.staging is staging
+        assert (staging[11:] == 0).all() and (staging[:11, 32:] == 0).all()
+    # an OFFSET view of the staging buffer must not be mistaken for a
+    # fully-staged batch (it gets detached and restaged, not aliased)
+    staging[:20, :32] = rng.integers(0, 2, (20, 32), dtype=np.uint8)
+    view = staging[5:16, :32]
+    expected = _oracle_sums(cfg, acts, view.copy())
+    assert (server.executor.class_sums(
+        server.registry.get("m").program, view) == expected).all()
+
+
+def test_batcher_packs_into_staging_view():
+    b = Batcher(64)
+    h = RequestHandle(0, "s", 10)
+    b.enqueue(h, np.ones((10, 4), np.uint8))
+    out = np.full((64, 8), 7, np.uint8)  # stale garbage must be cleared
+    X, spans = b.next_batch("s", out=out)
+    assert X.shape == (10, 4) and np.shares_memory(X, out)
+    assert (out[:10, :4] == 1).all() and (out[10:] == 0).all()
+    assert (out[:10, 4:] == 0).all()
+    b.enqueue(RequestHandle(1, "s", 2), np.ones((2, 4), np.uint8))
+    with pytest.raises(ValueError, match="too small"):
+        b.next_batch("s", out=np.zeros((8, 4), np.uint8))
 
 
 def test_batcher_coalesces_and_splits():
