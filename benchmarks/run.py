@@ -1,50 +1,61 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,table2,fig6,fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only <suite>[,<suite>...]]
 
-Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
-Wall times are CPU-container measurements of the jitted JAX paths; the
-eFPGA-model columns (cycles/latency/energy) are derived from the paper's
-published pipeline/frequency constants (see tm_bench_common.py).
+``--only`` selects suites so a CI job only pays for what it checks
+(unknown names fail fast with exit code 2 — a typo must not silently
+skip a gate).  Prints ``name,us_per_call,derived`` CSV rows per the
+harness contract.  Wall times are CPU-container measurements of the
+jitted JAX paths; the eFPGA-model columns (cycles/latency/energy) are
+derived from the paper's published pipeline/frequency constants (see
+tm_bench_common.py).
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 
-ALL = ("table1", "table2", "fig6", "fig9", "tm_serve", "tm_recal",
-       "tm_kernels")
+# suite name -> module (lazy import: suites pull in jax at import time).
+# ALL derives from this table, so adding a suite here is the ONLY step —
+# a name in ALL can never silently dispatch to the wrong module.
+SUITES = {
+    "table1": "table1_resources",
+    "table2": "table2_latency",
+    "fig6": "fig6_memory",
+    "fig9": "fig9_tradeoff",
+    "tm_serve": "tm_serve",
+    "tm_recal": "tm_recal",
+    "tm_kernels": "tm_kernels",
+}
+ALL = tuple(SUITES)
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=",".join(ALL))
+    ap.add_argument(
+        "--only", type=str, default=",".join(ALL), metavar="SUITE[,SUITE]",
+        help=f"comma-separated subset of {', '.join(ALL)}",
+    )
     args = ap.parse_args()
     wanted = [w.strip() for w in args.only.split(",") if w.strip()]
+    unknown = [w for w in wanted if w not in SUITES]
+    if unknown:
+        print(
+            f"unknown benchmark suite(s) {', '.join(unknown)}; "
+            f"choose from: {', '.join(ALL)}",
+            file=sys.stderr,
+        )
+        return 2
 
     print("name,us_per_call,derived")
     for name in wanted:
-        if name == "table1":
-            from .table1_resources import run as r
-        elif name == "table2":
-            from .table2_latency import run as r
-        elif name == "fig6":
-            from .fig6_memory import run as r
-        elif name == "fig9":
-            from .fig9_tradeoff import run as r
-        elif name == "tm_serve":
-            from .tm_serve import run as r
-        elif name == "tm_recal":
-            from .tm_recal import run as r
-        elif name == "tm_kernels":
-            from .tm_kernels import run as r
-        else:
-            print(f"unknown benchmark {name}", file=sys.stderr)
-            continue
-        for row in r():
+        mod = importlib.import_module(f".{SUITES[name]}", __package__)
+        for row in mod.run():
             print(",".join(str(x) for x in row), flush=True)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

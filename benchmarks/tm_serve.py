@@ -1,6 +1,7 @@
 """Serving-subsystem benchmark: multi-tenant batched throughput + hot-swap
-under traffic, per executor backend.  Emits ``BENCH_tm_serve.json`` (CWD)
-and the harness CSV rows.
+under traffic, per engine, plus the ``repro.accel`` artifact deploy path
+(compile -> serialize -> load -> first prediction).  Emits
+``BENCH_tm_serve.json`` (CWD) and the harness CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run --only tm_serve
 
@@ -11,13 +12,15 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.accel import Accelerator, TMProgram, engine_names
 from repro.core import TMConfig, batch_class_sums, state_from_actions
 from repro.core.compress import encode
-from repro.serve_tm import BACKENDS, ServeCapacity, TMServer
+from repro.serve_tm import ServeCapacity, TMServer
 
 OUT_PATH = "BENCH_tm_serve.json"
 
@@ -86,7 +89,41 @@ def _bench_backend(backend: str, capacity: ServeCapacity, tiny: bool) -> dict:
                                   dims_a))
     summary["model_b"] = dict(zip(("n_classes", "n_clauses", "n_features"),
                                   dims_b))
+    summary["artifact"] = _bench_artifact_path(
+        backend, capacity, cfg_a, acts_a, model_a
+    )
     return summary
+
+
+def _bench_artifact_path(backend, capacity, cfg, acts, model) -> dict:
+    """The repro.accel deploy path on a COLD accelerator: compile ->
+    to_bytes -> from_bytes -> load -> first prediction.  first_pred_us
+    includes the engine's one-time jit (the "synthesis" the deploy pays
+    exactly once); load_us is the pure-data-movement reprogram."""
+    acc = Accelerator(capacity, engine=backend)
+    t0 = time.perf_counter()
+    art = acc.compile(model)
+    t1 = time.perf_counter()
+    blob = art.to_bytes()
+    t2 = time.perf_counter()
+    art2 = TMProgram.from_bytes(blob)
+    t3 = time.perf_counter()
+    acc.load("deploy", art2)
+    t4 = time.perf_counter()
+    x = np.zeros((1, cfg.n_features), np.uint8)
+    pred = acc.infer("deploy", x)
+    t5 = time.perf_counter()
+    oracle = _oracle_preds(cfg, acts, x)
+    return {
+        "bytes": len(blob),
+        "compile_us": (t1 - t0) * 1e6,
+        "serialize_us": (t2 - t1) * 1e6,
+        "deserialize_us": (t3 - t2) * 1e6,
+        "load_us": (t4 - t3) * 1e6,
+        "first_pred_us": (t5 - t4) * 1e6,
+        "total_us": (t5 - t0) * 1e6,
+        "bit_exact": bool(np.array_equal(pred, oracle)),
+    }
 
 
 def run():
@@ -113,16 +150,20 @@ def run():
         "backends": {},
     }
     rows = []
-    for backend in sorted(BACKENDS):
+    for backend in engine_names():
         summary = _bench_backend(backend, capacity, tiny)
         report["backends"][backend] = summary
+        art = summary["artifact"]
         rows.append((
             f"tm_serve_{backend}",
             f"{summary['engine_us']['p50']:.1f}",
             f"dps={summary['throughput_dps']:.0f}"
             f";fill={summary['fill_ratio']:.2f}"
             f";cache={summary['compile_cache_size']}"
-            f";exact={int(summary['bit_exact'])}",
+            f";exact={int(summary['bit_exact'])}"
+            f";art_total_us={art['total_us']:.0f}"
+            f";art_load_us={art['load_us']:.0f}"
+            f";art_bytes={art['bytes']}",
         ))
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=1)

@@ -1,36 +1,45 @@
-"""The paper's Fig-8 loop, CLOSED: online recalibration under live traffic.
+"""The paper's Fig-8 loop, CLOSED: online recalibration under live traffic,
+now entirely through the ``repro.accel`` façade.
 
-A ``RecalController`` serves drifting sensor traffic from a ``TMServer``
-slot while monitoring it.  When synthetic concept drift (a step change in
-the class prototypes — sensor aging) collapses the class-sum margins and
-the labelled accuracy window, the controller
+A ``RecalController`` serves drifting sensor traffic from an
+``Accelerator`` slot while monitoring it.  The accelerator's capacity
+envelope is NEGOTIATED from the deployed model (plus headroom for the
+larger models retraining grows); every publication ships as a stamped,
+checksummed ``TMProgram`` artifact.  When synthetic concept drift (a step
+change in the class prototypes — sensor aging) collapses the class-sum
+margins and the labelled accuracy window, the controller
 
   * fine-tunes the model on the buffered drifted traffic
     (``RecalWorker``, incremental fold-in-seeded ``fit_step``s),
   * compresses it and PROVES the stream bit-exact against the dense
-    oracle (``Compressor`` publication gate),
+    oracle AND inside the capacity envelope (``Compressor`` publication
+    gate -> ``TMProgram``),
   * hot-swaps the live slot through the drain-then-swap path, and
   * validates post-swap accuracy on held-out traffic, rolling back
     automatically if it regressed.
 
-Acceptance (asserted below, for every backend):
+Acceptance (asserted below, for every engine):
   * post-swap accuracy recovers above the pre-drift baseline minus 2%
   * the engine is NEVER recompiled: compile_cache_size() == 1 throughout
 
 Run:  PYTHONPATH=src python examples/online_recal.py \
           [interp|plan|sharded|popcount|all]
+      EXAMPLES_TINY=1 shrinks training/traffic for CI smoke runs.
 """
 
+import os
 import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.accel import Accelerator, CapacityPlan
 from repro.core import TMConfig
 from repro.data.pipeline import TMDatasetSpec, booleanized_tm_dataset
 from repro.recal import DriftMonitor, RecalController, RecalWorker
-from repro.serve_tm import ServeCapacity, TMServer
+
+TINY = os.environ.get("EXAMPLES_TINY", "0") == "1"
 
 # A self-contained edge task: 16 raw sensor channels, 4 classes,
 # 4-bit thermometer encoding -> 64 Boolean features.
@@ -42,35 +51,49 @@ RECOVERY_MARGIN = 0.02
 
 def train_initial():
     """The pre-deployment model + the booleanizer frozen at deploy time."""
-    xb, y, booler = booleanized_tm_dataset(SPEC, 2000, seed=0, drift=0.0)
+    n = 1200 if TINY else 2000
+    xb, y, booler = booleanized_tm_dataset(SPEC, n, seed=0, drift=0.0)
     cfg = TMConfig(
         n_classes=SPEC.n_classes, n_clauses=SPEC.n_clauses,
         n_features=booler.n_boolean_features,
     )
     worker = RecalWorker(cfg, key=jax.random.key(42))
-    worker.fine_tune_epochs(xb, y, epochs=5, batch=200)
+    worker.fine_tune_epochs(xb, y, epochs=4 if TINY else 5, batch=200)
     return cfg, worker.snapshot(), booler
 
 
-def run_backend(backend, cfg, init_state, booler):
+def negotiate_plan(cfg, init_state):
+    """Derive the synthesis-time envelope from the deployed model.
+
+    Headroom covers the larger include streams retraining grows; the
+    class/feature dims are pinned by the task, so they only pick up the
+    word-quantization slack."""
+    from repro.recal.compressor import Compressor
+
+    model = Compressor().compress(cfg, jnp.asarray(init_state)).model
+    return CapacityPlan.for_models([model], headroom=3.0, batch_words=4)
+
+
+def run_engine(engine, plan, cfg, init_state, booler):
     worker = RecalWorker(
         cfg, state=jnp.asarray(init_state), key=jax.random.key(42)
     )
-    server = TMServer(
-        ServeCapacity(feature_capacity=128, instruction_capacity=8192),
-        backend=backend,
-    )
+    acc = Accelerator(plan, engine=engine)
+    n_serve = 192 if TINY else 256
     controller = RecalController(
-        server, SLOT, worker,
+        acc, SLOT, worker,
         monitor=DriftMonitor(
-            window=512, min_samples=256,
+            window=384 if TINY else 512, min_samples=192 if TINY else 256,
             accuracy_threshold=0.92, margin_fraction=0.6,
         ),
-        buffer_batches=8, train_batch_size=256,
-        min_buffer_rows=1792, epochs_per_recal=10,
+        buffer_batches=8, train_batch_size=192 if TINY else 256,
+        min_buffer_rows=(7 * n_serve) if TINY else 1792,
+        epochs_per_recal=10,
         regression_margin=RECOVERY_MARGIN,
     )
     controller.deploy()
+    entry = acc.registry.get(SLOT)
+    assert entry.artifact is not None, "publications must ship artifacts"
 
     # healthy traffic: establishes the pre-drift baseline + margin reference
     xt, yt, _ = booleanized_tm_dataset(
@@ -78,17 +101,20 @@ def run_backend(backend, cfg, init_state, booler):
     )
     baseline_acc = float((controller.observe(xt, yt) == yt).mean())
     controller.freeze_baseline()
-    print(f"[{backend}] deployed v1, pre-drift baseline acc {baseline_acc:.3f}")
+    print(f"[{engine}] deployed v1 "
+          f"(artifact {entry.artifact.n_bytes}B, "
+          f"checksum {entry.artifact.checksum:#010x}), "
+          f"pre-drift baseline acc {baseline_acc:.3f}")
 
     # drift hits: stream labelled edge traffic through the closed loop
     swapped = False
     for i in range(12):
         xd, yd, _ = booleanized_tm_dataset(
-            SPEC, 256, seed=100 + i, drift=DRIFT, booleanizer=booler
+            SPEC, n_serve, seed=100 + i, drift=DRIFT, booleanizer=booler
         )
         preds, event = controller.serve(xd, yd)
-        acc = float((preds == yd).mean())
-        line = f"[{backend}] batch {i:2d}: acc {acc:.3f}"
+        acc_i = float((preds == yd).mean())
+        line = f"[{engine}] batch {i:2d}: acc {acc_i:.3f}"
         if event is not None:
             line += (
                 f"  -> RECAL v{event.version} ({event.reason}): "
@@ -106,37 +132,44 @@ def run_backend(backend, cfg, init_state, booler):
         SPEC, 1024, seed=999, drift=DRIFT, booleanizer=booler
     )
     final_acc = float((controller.observe(xf, yf) == yf).mean())
-    cache = server.compile_cache_size()
-    s = server.metrics.summary()
+    cache = acc.compile_cache_size()
+    s = acc.metrics.summary()
+    live = acc.registry.get(SLOT)
     print(
-        f"[{backend}] post-swap acc {final_acc:.3f} "
+        f"[{engine}] post-swap acc {final_acc:.3f} "
         f"(baseline {baseline_acc:.3f}, floor {baseline_acc - RECOVERY_MARGIN:.3f}); "
         f"{s['recals']} recal(s), {s['rollbacks']} rollback(s), "
-        f"{s['swaps']} swap(s), compile cache {cache}"
+        f"{s['swaps']} swap(s), compile cache {cache}; "
+        f"live: v{live.version} ({live.provenance})"
     )
 
-    assert swapped, f"[{backend}] drift never triggered a recalibration"
+    assert swapped, f"[{engine}] drift never triggered a recalibration"
     assert final_acc >= baseline_acc - RECOVERY_MARGIN, (
-        f"[{backend}] post-swap accuracy {final_acc:.3f} did not recover to "
+        f"[{engine}] post-swap accuracy {final_acc:.3f} did not recover to "
         f"baseline {baseline_acc:.3f} - {RECOVERY_MARGIN}"
     )
     assert cache == 1, (
-        f"[{backend}] engine recompiled: {cache} compiled variants"
+        f"[{engine}] engine recompiled: {cache} compiled variants"
     )
+    assert live.artifact is not None and live.provenance.startswith("recal:")
     return final_acc
 
 
 def main():
     choice = sys.argv[1] if len(sys.argv) > 1 else "all"
-    backends = (
+    engines = (
         ("interp", "plan", "sharded", "popcount")
         if choice == "all" else (choice,)
     )
     cfg, init_state, booler = train_initial()
-    finals = {b: run_backend(b, cfg, init_state, booler) for b in backends}
+    plan = negotiate_plan(cfg, init_state)
+    print(f"negotiated plan: {plan.as_dict()}")
+    finals = {
+        e: run_engine(e, plan, cfg, init_state, booler) for e in engines
+    }
     accs = sorted(set(np.round(list(finals.values()), 6)))
     print(
-        f"\nall backends recovered through live hot-swaps "
+        f"\nall engines recovered through live hot-swaps "
         f"({', '.join(f'{b}={a:.3f}' for b, a in finals.items())}); "
         f"bit-exact across engines: {len(accs) == 1}"
     )

@@ -6,28 +6,37 @@
   4. program the runtime-tunable accelerator via the stream protocol
   5. run batched compressed inference and verify it matches dense TM
   6. swap in a DIFFERENT task at runtime — zero recompilation
+  7. the modern deployment path: negotiate capacity, compile a portable
+     TMProgram artifact, ship bytes, load (the repro.accel façade)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+      EXAMPLES_TINY=1 shrinks training for CI smoke runs.
 """
+
+import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.accel import Accelerator
 from repro.core import TMConfig, accuracy, fit, init_state, include_actions
 from repro.core.compress import encode
 from repro.core.runtime import (
-    Accelerator,
+    Accelerator as StreamAccelerator,
     AcceleratorConfig,
     build_feature_stream,
     build_instruction_stream,
 )
 from repro.data.pipeline import TM_DATASETS, booleanized_tm_dataset
 
+TINY = os.environ.get("EXAMPLES_TINY", "0") == "1"
+
 
 def train_tm(dataset: str, seed: int = 0):
     spec = TM_DATASETS[dataset]
-    xb, y, booler = booleanized_tm_dataset(spec, 2000, seed=seed)
+    n_train = 800 if TINY else 2000
+    xb, y, booler = booleanized_tm_dataset(spec, n_train, seed=seed)
     xb_t, y_t, _ = booleanized_tm_dataset(spec, 500, seed=seed + 1,
                                           booleanizer=booler)
     cfg = TMConfig(
@@ -36,7 +45,7 @@ def train_tm(dataset: str, seed: int = 0):
     )
     state = init_state(cfg, jax.random.key(seed))
     state = fit(cfg, state, jax.random.key(seed + 1), jnp.asarray(xb),
-                jnp.asarray(y), epochs=10, batch=200)
+                jnp.asarray(y), epochs=4 if TINY else 10, batch=200)
     acc = accuracy(cfg, state, jnp.asarray(xb_t), jnp.asarray(y_t))
     return cfg, state, (xb_t, y_t), acc
 
@@ -62,7 +71,7 @@ def main():
         instruction_capacity=1 << 14, feature_capacity=1 << 11,
         class_capacity=16, batch_words=1,
     )
-    engine = Accelerator(acc_cfg)
+    engine = StreamAccelerator(acc_cfg)
     engine.feed(build_instruction_stream(model))
 
     # 5: batched compressed inference (32 datapoints per word, Fig 4.5)
@@ -86,6 +95,22 @@ def main():
         f"recompiles: {engine.compile_cache_size() - cache0} (must be 0)"
     )
     assert engine.compile_cache_size() == cache0
+
+    # 7: the repro.accel façade — negotiate the envelope from the model
+    # population, compile portable artifacts, ship bytes, load, serve
+    accel = Accelerator.for_models([model, model2], headroom=0.25)
+    blob = accel.compile(model).to_bytes()
+    accel.load("emg", blob, provenance="wire:quickstart")
+    accel.load("gesture", accel.compile(model2))
+    a_pred = accel.infer("emg", x_test[:64])
+    a_acc = float((a_pred == y_test[:64]).mean())
+    print(
+        f"[accel] engine={accel.engine.name} (auto-selected), plan="
+        f"{accel.plan.as_dict()}; artifact {len(blob)}B shipped over the "
+        f"wire; emg acc {a_acc:.3f}; compiled program(s): "
+        f"{accel.compile_cache_size()}"
+    )
+    assert accel.compile_cache_size() == 1
 
 
 if __name__ == "__main__":

@@ -1,14 +1,17 @@
 """The paper's Fig-8 system: on-field recalibration without resynthesis,
-on top of the serving subsystem.
+through the ``repro.accel`` façade.
 
-An edge server answers inference traffic while the data distribution
+An edge accelerator answers inference traffic while the data distribution
 DRIFTS (sensor aging / environment change — the paper's Gas Sensor Array
 Drift scenario).  A co-located training node (Raspberry-Pi-class; here:
-the JAX TM trainer on CPU) monitors accuracy, retrains on fresh data, and
-hot-swaps the model into the live slot via ``TMServer.register`` — the
-Fig-8 reprogram step as a first-class API.  The engine is never
+the JAX TM trainer on CPU) monitors accuracy, retrains on fresh data,
+compiles a portable ``TMProgram`` artifact and ships its BYTES into the
+live slot — the Fig-8 reprogram step over the wire.  The engine is never
 recompiled: model, class count and input dimensionality are all runtime
 state, and the loop asserts ``compile_cache_size() == 1`` throughout.
+
+(For the fully-automated loop — drift monitor, replay buffer, publication
+gate, auto-rollback — see examples/online_recal.py and repro.recal.)
 
 Run:  PYTHONPATH=src python examples/recalibration_loop.py
 """
@@ -17,10 +20,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.accel import Accelerator
 from repro.core import TMConfig, fit, include_actions, init_state
 from repro.core.compress import encode
 from repro.data.pipeline import TM_DATASETS, booleanized_tm_dataset
-from repro.serve_tm import ServeCapacity, TMServer
 
 SPEC = TM_DATASETS["gas"]
 RETRAIN_THRESHOLD = 0.90  # accuracy trigger for the training node
@@ -43,16 +46,16 @@ def train_node(drift: float, booleanizer, seed: int):
 
 
 def main():
-    server = TMServer(ServeCapacity(
-        instruction_capacity=1 << 15, feature_capacity=1 << 11,
-        class_capacity=16, clause_capacity=64, include_capacity=64,
-        batch_words=1,
-    ), backend="interp")  # the paper-faithful engine
-
-    # initial deployment
+    # initial deployment: negotiate the envelope from the first trained
+    # model (generous headroom — retrained include streams grow), pin the
+    # paper-faithful interp engine, ship the artifact
     model, booler = train_node(drift=0.0, booleanizer=None, seed=0)
-    server.register(SLOT, model)
-    print(f"deployed initial model; slot v{server.registry.get(SLOT).version}")
+    acc = Accelerator.for_models(
+        [model], headroom=2.0, batch_words=1, engine="interp"
+    )
+    acc.load(SLOT, acc.compile(model).to_bytes(), provenance="deploy")
+    print(f"engine={acc.engine.name}; negotiated plan {acc.plan.as_dict()}")
+    print(f"deployed initial model; slot v{acc.registry.get(SLOT).version}")
 
     for epoch, drift in enumerate([0.0, 0.15, 0.3, 0.5, 0.8, 1.2]):
         # edge sensor traffic under current drift — the batcher chunks the
@@ -60,27 +63,31 @@ def main():
         xb, y, _ = booleanized_tm_dataset(
             SPEC, 320, seed=100 + epoch, drift=drift, booleanizer=booler
         )
-        acc = float((server.infer(SLOT, xb) == y).mean())
+        score = float((acc.infer(SLOT, xb) == y).mean())
         marker = ""
-        if acc < RETRAIN_THRESHOLD:
+        if score < RETRAIN_THRESHOLD:
             # the training node retrains on the drifted distribution and
-            # hot-swaps the live slot AT RUNTIME (no resynthesis)
+            # hot-swaps the live slot AT RUNTIME (no resynthesis): compile
+            # -> bytes -> load, the same path a remote node would use
             model, booler = train_node(drift, booler, seed=200 + epoch)
-            server.register(SLOT, model)
+            blob = acc.compile(model).to_bytes()
+            acc.load(SLOT, blob, provenance=f"recal:drift={drift}")
             xb2, y2, _ = booleanized_tm_dataset(
                 SPEC, 320, seed=300 + epoch, drift=drift, booleanizer=booler
             )
-            acc2 = float((server.infer(SLOT, xb2) == y2).mean())
-            marker = f" -> RECALIBRATED, acc {acc2:.3f}"
-        print(f"drift {drift:4.2f}: accuracy {acc:.3f}{marker}")
+            score2 = float((acc.infer(SLOT, xb2) == y2).mean())
+            marker = (f" -> RECALIBRATED ({len(blob)}B artifact), "
+                      f"acc {score2:.3f}")
+        print(f"drift {drift:4.2f}: accuracy {score:.3f}{marker}")
 
-    s = server.metrics.summary()
+    s = acc.metrics.summary()
     print(
         f"\n{s['swaps'] - 1} runtime reprograms over {s['batches']} engine "
         f"batches ({s['throughput_dps']:.0f} datapoints/s), "
-        f"{server.compile_cache_size()} compiled program(s) total "
+        f"{acc.compile_cache_size()} compiled program(s) total "
         f"(the accelerator was never resynthesized)"
     )
+    assert acc.compile_cache_size() == 1
 
 
 if __name__ == "__main__":

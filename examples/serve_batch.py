@@ -1,22 +1,31 @@
-"""Multi-tenant batched TM serving with hot-swap under traffic.
+"""Multi-tenant batched TM serving through the ``repro.accel`` façade.
 
-Two tenants share ONE compiled engine (the paper's runtime-tunability
-claim, multi-tenant): requests are coalesced into 32-datapoint bit-packed
-words per slot, predictions demuxed back per request, and one tenant is
-recalibrated mid-traffic to a model with a different class count AND
-feature count — with zero recompilation.
+The full deployment lifecycle on one accelerator:
 
-Run:  PYTHONPATH=src python examples/serve_batch.py [--backend plan]
+  * the capacity envelope is NEGOTIATED from the model population
+    (``Accelerator.for_models`` — no hand-built capacities),
+  * models ship as portable ``TMProgram`` artifacts: ``compile`` ->
+    ``to_bytes`` (the training node) -> ``load`` (the serving node),
+  * two tenants share ONE compiled engine; requests are coalesced into
+    32-datapoint bit-packed words per slot and demuxed per request,
+  * one tenant is hot-swapped mid-traffic to a model with a different
+    class count AND feature count — zero recompilation.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py [--engine auto]
+      EXAMPLES_TINY=1 shrinks the traffic for CI smoke runs.
 """
 
 import argparse
+import os
 import time
 
 import numpy as np
 
+from repro.accel import Accelerator
 from repro.core import TMConfig
 from repro.core.compress import encode
-from repro.serve_tm import ServeCapacity, TMServer
+
+TINY = os.environ.get("EXAMPLES_TINY", "0") == "1"
 
 
 def random_model(rng, M, C, F, density=0.03):
@@ -26,47 +35,63 @@ def random_model(rng, M, C, F, density=0.03):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="plan",
-                    choices=("interp", "plan", "sharded"))
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "interp", "plan", "sharded", "popcount"))
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    server = TMServer(ServeCapacity(
-        instruction_capacity=8192, feature_capacity=256, class_capacity=16,
-        clause_capacity=64, include_capacity=32, batch_words=4,
-    ), backend=args.backend)
+    vision = random_model(rng, 10, 40, 196)
+    sensor_v1 = random_model(rng, 6, 24, 64)
+    sensor_v2 = random_model(rng, 9, 32, 112)  # the mid-traffic recal
 
-    # two tenants, one engine
-    server.register("vision", random_model(rng, 10, 40, 196))
-    server.register("sensor", random_model(rng, 6, 24, 64))
+    # capacity negotiation: the minimal word-quantized envelope covering
+    # the whole population (25% headroom for whatever ships next)
+    acc = Accelerator.for_models(
+        [vision, sensor_v1, sensor_v2], headroom=0.25,
+        engine=None if args.engine == "auto" else args.engine,
+    )
+    print(f"engine={acc.engine.name} (auto-selected: {args.engine == 'auto'})")
+    print(f"negotiated plan: {acc.plan.as_dict()}")
 
+    # the train node compiles portable artifacts; serving loads BYTES
+    blob = acc.compile(vision).to_bytes()
+    print(f"vision artifact: {len(blob)} bytes "
+          f"(checksummed, capacity-stamped)")
+    acc.load("vision", blob, provenance="wire:train-node")
+    acc.load("sensor", acc.compile(sensor_v1))
+
+    n_requests = 16 if TINY else 64
     t0 = time.time()
     handles = []
-    for i in range(64):  # interleaved traffic, ragged request sizes
+    for i in range(n_requests):  # interleaved traffic, ragged request sizes
         slot, f = (("vision", 196), ("sensor", 64))[i % 2]
         x = rng.integers(0, 2, (int(rng.integers(1, 20)), f)).astype(np.uint8)
-        handles.append(server.submit(slot, x))
-    server.flush()
+        handles.append(acc.submit(slot, x))
+    acc.flush()
     assert all(h.done for h in handles)
 
     # hot-swap "sensor" mid-traffic: different class AND feature count
-    for _ in range(6):
-        server.submit("sensor", rng.integers(0, 2, (8, 64)).astype(np.uint8))
-    server.register("sensor", random_model(rng, 9, 32, 112))  # drains first
-    for _ in range(16):
-        server.submit("sensor", rng.integers(0, 2, (8, 112)).astype(np.uint8))
-    server.flush()
+    for _ in range(2 if TINY else 6):
+        acc.submit("sensor", rng.integers(0, 2, (8, 64)).astype(np.uint8))
+    acc.load("sensor", acc.compile(sensor_v2).to_bytes(),
+             provenance="recal:drift")  # queued traffic drains first
+    for _ in range(4 if TINY else 16):
+        acc.submit("sensor", rng.integers(0, 2, (8, 112)).astype(np.uint8))
+    acc.flush()
     wall = time.time() - t0
 
-    s = server.metrics.summary()
-    print(f"backend={args.backend}  wall={wall:.2f}s")
-    print(f"batches={s['batches']}  rows={s['rows']}  "
+    entry = acc.registry.get("sensor")
+    print(f"sensor slot: v{entry.version} ({entry.provenance}), artifact "
+          f"checksum {entry.artifact.checksum:#010x}")
+    s = acc.metrics.summary()
+    print(f"wall={wall:.2f}s  batches={s['batches']}  rows={s['rows']}  "
           f"requests={s['requests_completed']}  swaps={s['swaps']}")
     print(f"throughput={s['throughput_dps']:.0f} datapoints/s  "
           f"fill={s['fill_ratio']:.2f}  "
           f"engine p50={s['engine_us']['p50']:.0f}us")
-    print(f"compiled program(s): {server.compile_cache_size()} "
+    print(f"compiled program(s): {acc.compile_cache_size()} "
           f"(hot swaps never resynthesize)")
+    assert acc.compile_cache_size() == 1
 
 
 if __name__ == "__main__":

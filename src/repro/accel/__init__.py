@@ -1,0 +1,63 @@
+"""repro.accel — the capability-negotiated Accelerator façade.
+
+The one public surface for deploying and retuning runtime-tunable TMs:
+
+  capacity.py   CapacityPlan (the word-quantized synthesis-time envelope,
+                auto-derived from a model population) + CapacityExceeded
+  engine.py     the formal Engine plugin protocol: @register_engine,
+                capability flags (supports_donation / needs_mesh /
+                priority), uniform make_engine, deterministic
+                select_engine
+  engines.py    the four built-in plugins: interp / plan / sharded /
+                popcount
+  program.py    TMProgram — the versioned, checksummed, wire-portable
+                deployment artifact (to_bytes / from_bytes)
+  facade.py     Accelerator — negotiate, compile, ship, load, serve,
+                recalibrate; never resynthesize
+
+``repro.serve_tm`` remains the serving machinery underneath (server,
+batcher, registry, metrics); its old executor-level names are thin
+deprecation shims onto this package.
+"""
+
+from .capacity import (
+    HEADROOM_KNOBS,
+    QUANTA,
+    CapacityExceeded,
+    CapacityPlan,
+    model_requirements,
+)
+from .engine import (
+    ENGINES,
+    Engine,
+    EngineBase,
+    engine_names,
+    make_engine,
+    register_engine,
+    select_engine,
+)
+from .engines import InterpEngine, PlanEngine, PopcountEngine, ShardedEngine
+from .program import FORMAT_VERSION, TMProgram
+from .facade import Accelerator
+
+__all__ = [
+    "Accelerator",
+    "CapacityExceeded",
+    "CapacityPlan",
+    "ENGINES",
+    "Engine",
+    "EngineBase",
+    "FORMAT_VERSION",
+    "HEADROOM_KNOBS",
+    "InterpEngine",
+    "PlanEngine",
+    "PopcountEngine",
+    "QUANTA",
+    "ShardedEngine",
+    "TMProgram",
+    "engine_names",
+    "make_engine",
+    "model_requirements",
+    "register_engine",
+    "select_engine",
+]

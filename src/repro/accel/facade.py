@@ -1,0 +1,161 @@
+"""The Accelerator façade — one public entry point for deploying and
+retuning runtime-tunable TMs (MATADOR's "single automated toolchain API"
+applied to our serving stack).
+
+    # negotiate the synthesis-time envelope from the model population
+    acc = Accelerator.for_models([model_a, model_b], headroom=0.5)
+
+    # train node: compile the portable artifact and ship it
+    blob = acc.compile(model_a).to_bytes()
+
+    # serving node: load = integrity check + pure data movement
+    acc.load("tenant", blob)
+    preds = acc.infer("tenant", x)
+
+    # the Fig-8 loop: retune in the field, never resynthesize
+    acc.load("tenant", acc.compile(model_b), provenance="recal:drift")
+    assert acc.compile_cache_size() == 1
+
+The façade auto-selects the fastest eligible engine plugin via the
+capability flags (popcount off-mesh, the sharded shard_map when a mesh is
+provisioned); pass ``engine=`` to pin one, ``engine_options=`` for
+per-engine knobs (e.g. ``{"implementation": "pallas"}``).
+
+Everything underneath is the existing serving machinery: an engine plugin
+(``accel.engines``), the versioned slot registry, the dynamic batcher and
+metrics (``serve_tm``).  The façade IS a valid ``RecalController`` server
+— ``repro.recal`` runs against it unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from ..core.compress import CompressedModel
+from .capacity import CapacityPlan
+from .engine import make_engine, select_engine
+from .program import TMProgram
+
+
+class Accelerator:
+    """A deployed accelerator: negotiated capacity + one engine plugin +
+    the multi-tenant serving surface (slots, batching, hot-swap,
+    rollback)."""
+
+    def __init__(
+        self,
+        plan: Optional[CapacityPlan] = None,
+        *,
+        engine: Optional[str] = None,
+        mesh=None,
+        engine_options: Optional[dict] = None,
+        history_depth: int = 4,
+    ):
+        # deferred: serve_tm.server imports accel.engine — importing it at
+        # module scope would cycle through the package inits
+        from ..serve_tm.server import TMServer
+
+        self.plan = plan if plan is not None else CapacityPlan()
+        name = engine if engine is not None else select_engine(
+            self.plan, mesh=mesh
+        )
+        self.engine = make_engine(
+            name, self.plan, mesh=mesh, **(engine_options or {})
+        )
+        self.server = TMServer(
+            self.plan, engine=self.engine, history_depth=history_depth
+        )
+
+    @classmethod
+    def for_models(
+        cls,
+        models: Iterable[CompressedModel],
+        *,
+        headroom: float = 0.0,
+        batch_words: int = 4,
+        engine: Optional[str] = None,
+        mesh=None,
+        engine_options: Optional[dict] = None,
+        history_depth: int = 4,
+    ) -> "Accelerator":
+        """Capacity-negotiated construction: derive the minimal quantized
+        envelope for ``models`` (see ``CapacityPlan.for_models``) and
+        deploy an engine at that shape."""
+        plan = CapacityPlan.for_models(
+            models, headroom=headroom, batch_words=batch_words
+        )
+        return cls(
+            plan, engine=engine, mesh=mesh, engine_options=engine_options,
+            history_depth=history_depth,
+        )
+
+    # -- the deployment artifact path ---------------------------------------
+
+    def compile(self, model: CompressedModel) -> TMProgram:
+        """Model -> portable ``TMProgram`` artifact, stamped with this
+        accelerator's capacity envelope.  Raises ``CapacityExceeded`` when
+        the model doesn't fit the deployed engine's buffers — the EXACT
+        check ``load`` will repeat, so compile-time is where a misfit
+        surfaces, not the serving node's load path.  (Load revalidates by
+        design: artifacts routinely cross process/node boundaries, so the
+        one extra host-side stream decode per publication is the price of
+        never trusting the wire.)"""
+        self.engine.validate_model(model)
+        return TMProgram(capacity=self.plan, model=model)
+
+    def load(
+        self,
+        slot: str,
+        artifact: "TMProgram | bytes | CompressedModel",
+        provenance: str = "load",
+    ):
+        """Install an artifact (or raw ``to_bytes()`` blob, or a bare
+        model) into ``slot`` — integrity-checked, capacity-validated, then
+        pure data movement with the usual drain-then-swap discipline."""
+        return self.server.register(slot, artifact, provenance=provenance)
+
+    # -- serving delegation (the façade IS a TMServer-shaped object) ---------
+
+    def register(self, slot, model, provenance: str = "install"):
+        return self.server.register(slot, model, provenance=provenance)
+
+    def rollback(self, slot: str):
+        return self.server.rollback(slot)
+
+    def submit(self, slot: str, x: np.ndarray):
+        return self.server.submit(slot, x)
+
+    def flush(self) -> None:
+        self.server.flush()
+
+    def infer(self, slot: str, x: np.ndarray) -> np.ndarray:
+        return self.server.infer(slot, x)
+
+    def class_sums(self, slot: str, x: np.ndarray) -> np.ndarray:
+        return self.server.class_sums(slot, x)
+
+    def compile_cache_size(self) -> int:
+        return self.server.compile_cache_size()
+
+    @property
+    def capacity(self) -> CapacityPlan:
+        return self.plan
+
+    @property
+    def registry(self):
+        return self.server.registry
+
+    @property
+    def metrics(self):
+        return self.server.metrics
+
+    def slots(self) -> Sequence[str]:
+        return self.server.registry.names()
+
+    def __repr__(self) -> str:
+        return (
+            f"Accelerator(engine={self.engine.name!r}, "
+            f"plan={self.plan.as_dict()})"
+        )

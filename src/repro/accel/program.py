@@ -1,0 +1,168 @@
+"""TMProgram: the versioned, wire-transportable deployment artifact.
+
+ETHEREAL's insight, applied to our Fig-8 loop: the *compressed program*
+— not the dense model — is the thing that ships.  A ``TMProgram`` bundles
+the uint16 include-instruction stream with the capacity envelope it was
+compiled against and a checksum, so a training node can ``to_bytes()`` it
+onto the wire and a serving node can ``from_bytes()`` + ``load`` it into
+a live accelerator with no shared process state:
+
+    art  = accelerator.compile(model)        # stamp + stream + checksum
+    blob = art.to_bytes()                    # -> network / flash / disk
+    ...
+    art2 = TMProgram.from_bytes(blob)        # integrity-checked
+    accelerator.load("slot", art2)           # reprogram: data movement
+
+Layout (all little-endian):
+
+    header   4s  magic  b"TMPG"
+             H   format version (1)
+             H   reserved (0)
+             I   payload length in bytes
+             I   CRC-32 of the payload
+    payload  6I  capacity stamp (instruction, feature, class, clause,
+                 include capacities, batch_words)
+             4I  model dims (n_classes, n_clauses, n_features,
+                 n_instructions)
+             H*  the instruction stream, n_instructions uint16 words
+
+``from_bytes`` refuses truncated blobs, wrong magic, future format
+versions and checksum mismatches with specific errors — a corrupted
+artifact must never reach a live accelerator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+
+import numpy as np
+
+from ..core.compress import CompressedModel
+from .capacity import CapacityPlan
+
+MAGIC = b"TMPG"
+FORMAT_VERSION = 1
+
+_HEADER = struct.Struct("<4sHHII")
+_CAPS = struct.Struct("<6I")
+_DIMS = struct.Struct("<4I")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TMProgram:
+    """One deployable program: capacity stamp + instruction stream.
+
+    The stamp records the envelope the artifact was compiled for — a
+    serving node whose own plan differs can still load it as long as the
+    model fits (``CapacityPlan.validate`` at load time decides)."""
+
+    capacity: CapacityPlan
+    model: CompressedModel
+    format_version: int = FORMAT_VERSION
+
+    # -- identity ------------------------------------------------------------
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, TMProgram)
+            and self.format_version == other.format_version
+            and self.capacity == other.capacity
+            and self.model.n_classes == other.model.n_classes
+            and self.model.n_clauses == other.model.n_clauses
+            and self.model.n_features == other.model.n_features
+            and np.array_equal(self.model.instructions,
+                               other.model.instructions)
+        )
+
+    __hash__ = None  # mutable-array payload; identity-hashing would lie
+
+    # -- wire format ---------------------------------------------------------
+
+    def _payload(self) -> bytes:
+        m = self.model
+        return (
+            _CAPS.pack(*(self.capacity.as_dict()[k]
+                         for k in CapacityPlan.KNOBS))
+            + _DIMS.pack(m.n_classes, m.n_clauses, m.n_features,
+                         m.n_instructions)
+            + np.ascontiguousarray(m.instructions, dtype="<u2").tobytes()
+        )
+
+    @property
+    def checksum(self) -> int:
+        """CRC-32 of the payload (what the header carries on the wire)."""
+        return zlib.crc32(self._payload())
+
+    @property
+    def n_bytes(self) -> int:
+        return _HEADER.size + _CAPS.size + _DIMS.size + 2 * self.model.n_instructions
+
+    def to_bytes(self) -> bytes:
+        payload = self._payload()
+        header = _HEADER.pack(
+            MAGIC, self.format_version, 0, len(payload), zlib.crc32(payload)
+        )
+        return header + payload
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "TMProgram":
+        blob = bytes(blob)
+        if len(blob) < _HEADER.size:
+            raise ValueError(
+                f"truncated TMProgram artifact: {len(blob)} bytes is "
+                f"smaller than the {_HEADER.size}-byte header"
+            )
+        magic, version, _, payload_len, crc = _HEADER.unpack_from(blob)
+        if magic != MAGIC:
+            raise ValueError(
+                f"not a TMProgram artifact (magic {magic!r}, "
+                f"expected {MAGIC!r})"
+            )
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"TMProgram format version {version} is newer than this "
+                f"runtime understands (<= {FORMAT_VERSION}); upgrade the "
+                f"serving node"
+            )
+        payload = blob[_HEADER.size:]
+        if len(payload) != payload_len:
+            raise ValueError(
+                f"truncated TMProgram artifact: header promises "
+                f"{payload_len} payload bytes, got {len(payload)}"
+            )
+        if zlib.crc32(payload) != crc:
+            raise ValueError(
+                "TMProgram checksum mismatch — the artifact was corrupted "
+                "in transit; refusing to load it into a live accelerator"
+            )
+        caps = _CAPS.unpack_from(payload, 0)
+        n_classes, n_clauses, n_features, n_instructions = _DIMS.unpack_from(
+            payload, _CAPS.size
+        )
+        expect = _CAPS.size + _DIMS.size + 2 * n_instructions
+        if payload_len != expect:
+            # a CRC-consistent blob can still LIE about its own shape
+            # (buggy producer): dims promising more words than present, or
+            # trailing words the dims disown — both would ship a wrong
+            # model, so both are hard errors
+            raise ValueError(
+                f"inconsistent TMProgram artifact: dims declare "
+                f"{n_instructions} instructions ({expect} payload bytes) "
+                f"but the payload carries {payload_len}"
+            )
+        stream = np.frombuffer(
+            payload, dtype="<u2", count=n_instructions,
+            offset=_CAPS.size + _DIMS.size,
+        ).astype(np.uint16)
+        return cls(
+            capacity=CapacityPlan(**dict(zip(CapacityPlan.KNOBS, caps))),
+            model=CompressedModel(
+                instructions=stream,
+                n_classes=n_classes,
+                n_clauses=n_clauses,
+                n_features=n_features,
+            ),
+            format_version=version,
+        )

@@ -218,6 +218,19 @@ class DecodedPlan:
     def n_clauses_total(self) -> int:
         return int(self.clause_pol.shape[0])
 
+    def clauses_per_class(self, n_classes: int | None = None) -> np.ndarray:
+        """int64[M] non-empty clauses per class — the clause-table depth a
+        deployment must provision (capacity negotiation reads its max)."""
+        m = self.n_classes if n_classes is None else n_classes
+        return np.bincount(self.clause_class, minlength=m)
+
+    def includes_per_clause(self) -> np.ndarray:
+        """int64[Ncl] includes per (non-empty) clause — the include-slot
+        width a clause-major layout must provision."""
+        if self.n_clauses_total == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.bincount(self.clause_id, minlength=self.n_clauses_total)
+
 
 def decode_to_plan(model: CompressedModel) -> DecodedPlan:
     """Walk the stream once on the host, materializing absolute indices."""

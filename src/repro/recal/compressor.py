@@ -6,6 +6,12 @@ hot-swapped into a live accelerator it is decoded back and checked
 bit-exact against the dense oracle (``core.compress.validate_roundtrip``)
 on a deterministic probe batch plus, optionally, a sample of real traffic.
 A model that fails the gate never reaches the registry.
+
+With a ``CapacityPlan``, the gate also covers the deployment envelope:
+the model must FIT the plan (``CapacityExceeded`` otherwise — better to
+learn that on the training node than on the live accelerator's load
+path), and the report carries the stamped, checksummed ``TMProgram``
+artifact — the wire-portable thing the controller actually publishes.
 """
 
 from __future__ import annotations
@@ -15,6 +21,8 @@ from typing import Optional
 
 import numpy as np
 
+from ..accel.capacity import CapacityPlan
+from ..accel.program import TMProgram
 from ..core.compress import CompressedModel, encode, validate_roundtrip
 from ..core.tm import TMConfig, include_actions
 
@@ -27,12 +35,33 @@ class CompressionReport:
     n_includes: int
     compression_ratio: float
     probe_rows: int
+    artifact: Optional[TMProgram] = None  # stamped when a plan was given
 
 
 class Compressor:
-    def __init__(self, *, probe_rows: int = 64, probe_seed: int = 0):
+    def __init__(
+        self,
+        *,
+        probe_rows: int = 64,
+        probe_seed: int = 0,
+        plan: Optional[CapacityPlan] = None,
+        engine=None,
+        validate_knobs=None,
+    ):
+        """``plan`` turns the gate capacity-aware and the report
+        artifact-bearing.  Pass the TARGET ``engine`` to gate on exactly
+        the check its load path will repeat (``Engine.validate_model`` —
+        a publication the gate passes can never crash the hot-swap);
+        ``validate_knobs`` instead narrows a plain plan check to a knob
+        subset (None = the full envelope, conservative for every
+        engine)."""
         self.probe_rows = probe_rows
         self.probe_seed = probe_seed
+        self.engine = engine
+        if plan is None and engine is not None:
+            plan = engine.plan
+        self.plan = plan
+        self.validate_knobs = validate_knobs
 
     def compress(
         self,
@@ -59,9 +88,20 @@ class Compressor:
                 )
             probe = np.concatenate([probe, sample], axis=0)
         validate_roundtrip(cfg, actions, model, probe)
+        artifact = None
+        if self.engine is not None:
+            # the capacity half of the gate: raises CapacityExceeded with
+            # the offending knob before anything touches a live slot —
+            # the exact check the target engine's load path will repeat
+            self.engine.validate_model(model)
+            artifact = TMProgram(capacity=self.plan, model=model)
+        elif self.plan is not None:
+            self.plan.validate(model, self.validate_knobs)
+            artifact = TMProgram(capacity=self.plan, model=model)
         return CompressionReport(
             model=model,
             n_includes=int(actions.sum()),
             compression_ratio=model.compression_ratio(cfg),
             probe_rows=probe.shape[0],
+            artifact=artifact,
         )

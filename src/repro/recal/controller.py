@@ -71,7 +71,20 @@ class RecalController:
         self.slot = slot
         self.worker = worker
         self.monitor = monitor or DriftMonitor()
-        self.compressor = compressor or Compressor()
+        if compressor is None:
+            # stamp publications against the server's negotiated capacity
+            # plan when it exposes one: every recal swap then ships a
+            # checksummed TMProgram artifact (reprogram-over-the-wire).
+            # Gating on the serving ENGINE means the capacity half of the
+            # gate is exactly the check the hot-swap will repeat.
+            eng = getattr(server, "engine", None)
+            if eng is None:
+                eng = getattr(server, "executor", None)
+            compressor = Compressor(
+                plan=getattr(server, "capacity", None),
+                engine=eng if hasattr(eng, "validate_model") else None,
+            )
+        self.compressor = compressor
         self.epochs_per_recal = epochs_per_recal
         self.train_batch_size = train_batch_size
         # don't retrain off a thin buffer: a trigger only fires once this
@@ -88,9 +101,15 @@ class RecalController:
 
     def deploy(self, provenance: str = "deploy") -> None:
         """Compress the worker's current state and install it into the
-        slot (initial deployment or a manual push)."""
+        slot (initial deployment or a manual push).  Publishes the
+        stamped ``TMProgram`` artifact when the compressor carries a
+        capacity plan."""
         report = self.compressor.compress(self.worker.cfg, self.worker.state)
-        self.server.register(self.slot, report.model, provenance=provenance)
+        self.server.register(
+            self.slot,
+            report.artifact if report.artifact is not None else report.model,
+            provenance=provenance,
+        )
 
     def freeze_baseline(self) -> float:
         """Snapshot the current margin window as the healthy reference
@@ -168,17 +187,28 @@ class RecalController:
         )
         train_s = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        report = self.compressor.compress(
-            self.worker.cfg, self.worker.state, traffic_sample=X_hold
-        )
-        compress_s = time.perf_counter() - t0
+        try:
+            t0 = time.perf_counter()
+            report = self.compressor.compress(
+                self.worker.cfg, self.worker.state, traffic_sample=X_hold
+            )
+            compress_s = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        entry = self.server.register(
-            self.slot, report.model, provenance=f"recal:{reason}"
-        )
-        swap_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            entry = self.server.register(
+                self.slot,
+                report.artifact if report.artifact is not None
+                else report.model,
+                provenance=f"recal:{reason}",
+            )
+            swap_s = time.perf_counter() - t0
+        except ValueError:
+            # publication refused (capacity envelope exhausted, or the
+            # bit-exactness gate tripped): the live slot is untouched, so
+            # revert the worker too — its fine-tuned state was never
+            # published and must not silently seed the next attempt
+            self.worker.restore(snap)
+            raise
 
         acc_after = float(
             (self.server.infer(self.slot, X_hold) == Y_hold).mean()

@@ -1,13 +1,16 @@
 """Multi-tenant batched serving over the runtime-tunable TM accelerator.
 
-Layers:
-  executors.py   ServeCapacity + the four engine backends
-                 (interp / plan / sharded / popcount), one private jit
-                 cache each
+The engine/capacity layer lives in ``repro.accel`` (the public façade:
+``Accelerator``, ``CapacityPlan``, ``TMProgram``, the ``Engine`` plugin
+registry); this package is the serving machinery on top of it:
+
   batching.py    request queue, 32-datapoint-word coalescing, demux
-  registry.py    named model slots with hot-swap (Fig-8 recalibration)
+  registry.py    named model slots with hot-swap + bounded history
+                 (Fig-8 recalibration; accepts TMProgram artifacts)
   metrics.py     latency/throughput instrumentation
-  server.py      TMServer — the public API tying it together
+  server.py      TMServer — multi-tenant submit/flush/infer
+  executors.py   DEPRECATED shim: the old ServeCapacity/executor names,
+                 re-exported from repro.accel
 """
 
 from .batching import Batcher, RequestHandle

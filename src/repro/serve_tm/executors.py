@@ -1,439 +1,63 @@
-"""Pluggable executor backends for the TM serving subsystem.
+"""DEPRECATED shim — the executor layer moved to ``repro.accel``.
 
-Three engines over the same ``CompressedModel``, one shared contract:
+The serving engines are now formal plugins (``repro.accel.engines``)
+behind the ``Engine`` protocol, capacity is the negotiated
+``CapacityPlan``, and deployment goes through the ``Accelerator`` façade
+(``repro.accel.facade``).  The old names stay importable here so existing
+callers keep working:
 
-  ``program(model)``             host-side compile-free "reprogram" — decode
-                                 the instruction stream into the backend's
-                                 fixed-capacity buffers (pure data movement)
-  ``class_sums(prog, x)``        {0,1}[B, F] -> int32[B, n_classes]
-  ``compile_cache_size()``       # of compiled variants of THIS executor's
-                                 jitted program (the zero-resynthesis
-                                 property: must stay 1 across model swaps)
+    ServeCapacity      -> accel.capacity.CapacityPlan  (same knobs,
+                          same defaults; capacity errors are now the
+                          structured CapacityExceeded, still a ValueError)
+    InterpExecutor     -> accel.engines.InterpEngine
+    PlanExecutor       -> accel.engines.PlanEngine
+    ShardedExecutor    -> accel.engines.ShardedEngine
+    PopcountExecutor   -> accel.engines.PopcountEngine
+    BACKENDS           -> accel.engine.ENGINES (the live plugin registry)
+    make_executor(...) -> accel.engine.make_engine(...)
 
-Backends:
-
-  * ``interp``   — the paper-faithful stream interpreter
-    (``core.interp.interpret_stream``): one instruction per scan step over
-    the fixed-depth instruction memory.
-  * ``plan``     — the decoded-plan fast path
-    (``core.interp.plan_class_sums``): gather + segmented reduction,
-    parallel across includes and datapoints.
-  * ``sharded``  — the ``dist.tm_sharded`` clause-major shard_map executor
-    (classes over ``model``, batch over the data axes); on a 1x1 mesh this
-    is the single-device realization of the Fig-7 multi-core split.
-  * ``popcount`` — the popcount bitplane fast path
-    (``kernels.tm_popcount``): clause outputs stay packed ``uint32`` until
-    a clause boundary; class sums come from ``lax.population_count``
-    against per-class polarity-bank selection bitplanes.  Pallas kernel on
-    TPU, the bit-exact pure-XLA twin elsewhere.
-
-All four are bit-exact against the ``core.tm.batch_class_sums`` oracle
-(enforced by tests/test_serve_tm.py).  Every executor instance owns a
-PRIVATE jit cache (a fresh closure over the underlying function), so
-``compile_cache_size()`` counts only this engine's compilations — the
-module-level jit caches of interp.py are shared process-wide and would
-make the ==1 assertion meaningless under parallel test traffic.
-
-Serving buffers are device-resident: ``program()`` moves the decoded
-program to the accelerator ONCE (``jax.device_put``); per-flush features
-are packed by the batcher straight into a preallocated host staging array
-(``_ExecutorBase.staging``) instead of a fresh ``np.pad`` per call, and
-the popcount backend donates its per-call device copy of that staging
-block back to XLA (``donate_argnums``) so flushes never accumulate live
-feature buffers.
+New code should import from ``repro.accel`` directly.  This module also
+no longer mutates process-global warning state: the donation-declined
+suppression is scoped to the donating engine's dispatch
+(``accel.engine._donation_declined_ok``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import warnings
-from typing import Any, Dict
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..configs.base import _pad_to
-from ..core.compress import CompressedModel, decode_to_plan
-from ..core.interp import interpret_stream, pack_features, pad_plan, plan_class_sums
-from ..core.tm import literals, pack_literals
-from ..dist.sharding import _axis_sizes
-from ..dist.tm_sharded import (
-    TMShardedConfig,
-    build_tm_sharded,
-    fill_clause_tables,
-)
-from ..kernels.tm_popcount.kernel import tm_popcount, tm_popcount_xla
-from ..kernels.tm_popcount.ops import plan_to_popcount_operands
-from ..kernels.tuning import choose_blocks
-
-# buffer donation is an optimization hint; off-TPU XLA may decline it and
-# warn — that is expected on the CPU test/CI containers, not actionable
-warnings.filterwarnings(
-    "ignore", message="Some donated buffers were not usable"
+from ..accel.capacity import CapacityExceeded, CapacityPlan
+from ..accel.engine import ENGINES, EngineBase, make_engine
+from ..accel.engines import (
+    InterpEngine,
+    PlanEngine,
+    PopcountEngine,
+    ShardedEngine,
 )
 
-
-@dataclasses.dataclass(frozen=True)
-class ServeCapacity:
-    """The serving deployment's "synthesis-time" capacity plan (the Fig-6
-    memory-depth customization, extended with the clause-table dims the
-    plan/sharded layouts need).  Everything inside these bounds is runtime
-    state; exceeding them raises (= "resynthesize with a bigger config")."""
-
-    instruction_capacity: int = 4096   # instruction memory / include-list depth
-    feature_capacity: int = 256        # Boolean features per datapoint
-    class_capacity: int = 16           # class-sum accumulator bank depth
-    clause_capacity: int = 64          # clauses per class (clause tables)
-    include_capacity: int = 32         # includes per clause (clause-major)
-    batch_words: int = 4               # 32 datapoints per bit-packed word
-
-    @property
-    def batch_capacity(self) -> int:
-        return self.batch_words * 32
-
-    @property
-    def clause_total_capacity(self) -> int:
-        return self.class_capacity * self.clause_capacity
-
-
-def _private_jit(fn, **jit_kwargs):
-    """jit over a FRESH closure: JAX keys its compilation cache on the
-    callable, so wrapping gives this executor instance its own cache."""
-
-    def inner(*args, **kwargs):
-        return fn(*args, **kwargs)
-
-    return jax.jit(inner, **jit_kwargs)
-
-
-def _check(cond: bool, what: str, have: int, cap: int, knob: str) -> None:
-    if not cond:
-        raise ValueError(
-            f"model {what} {have} exceeds serving capacity {cap}; "
-            f"resynthesize with a larger ServeCapacity.{knob}"
-        )
-
-
-class _ExecutorBase:
-    name = "?"
-
-    def __init__(self, capacity: ServeCapacity):
-        self.capacity = capacity
-        self._staging: np.ndarray | None = None
-
-    def compile_cache_size(self) -> int:
-        return self._fn._cache_size()
-
-    @property
-    def staging(self) -> np.ndarray:
-        """The engine's preallocated [batch_capacity, feature_capacity]
-        uint8 feature staging array.  The batcher packs request rows
-        straight into it (``Batcher.next_batch(out=...)``) and the engines
-        consume it as their one fixed operand shape — no per-flush host
-        allocation."""
-        if self._staging is None:
-            c = self.capacity
-            self._staging = np.zeros(
-                (c.batch_capacity, c.feature_capacity), np.uint8
-            )
-        return self._staging
-
-    def _pad_x(self, x: np.ndarray) -> np.ndarray:
-        """{0,1}[B, F] -> the staging array (zero-padded to capacity).
-
-        When ``x`` is already a view of ``self.staging`` (the batcher
-        packed it there), it is returned as-is — zero copies."""
-        c = self.capacity
-        B, F = x.shape
-        _check(B <= c.batch_capacity, "batch", B, c.batch_capacity,
-               "batch_words")
-        _check(F <= c.feature_capacity, "n_features", F, c.feature_capacity,
-               "feature_capacity")
-        st = self.staging
-        if np.shares_memory(x, st):
-            if (x.__array_interface__["data"][0]
-                    == st.__array_interface__["data"][0]):
-                # a leading view — the batcher packed rows [0, B) in place
-                # and zeroed the remainder (next_batch(out=) contract)
-                return st
-            # any other overlapping view would be corrupted by the zero
-            # fill below; detach it first
-            x = np.array(x)
-        st.fill(0)
-        st[:B, :F] = x
-        return st
-
-
-class InterpExecutor(_ExecutorBase):
-    """Paper-faithful fixed-capacity stream interpreter (Fig 4.4-4.6)."""
-
-    name = "interp"
-
-    def __init__(self, capacity: ServeCapacity):
-        super().__init__(capacity)
-        self._fn = _private_jit(
-            interpret_stream.__wrapped__, static_argnames=("m_cap",)
-        )
-
-    def program(self, model: CompressedModel) -> Dict[str, Any]:
-        c = self.capacity
-        _check(model.n_instructions <= c.instruction_capacity,
-               "n_instructions", model.n_instructions,
-               c.instruction_capacity, "instruction_capacity")
-        _check(model.n_classes <= c.class_capacity, "n_classes",
-               model.n_classes, c.class_capacity, "class_capacity")
-        _check(model.n_features <= c.feature_capacity, "n_features",
-               model.n_features, c.feature_capacity, "feature_capacity")
-        imem = np.zeros(c.instruction_capacity, np.uint16)
-        imem[: model.n_instructions] = model.instructions
-        return {
-            "imem": jnp.asarray(imem),
-            "n_inst": jnp.int32(model.n_instructions),
-            "n_classes": model.n_classes,
-            "n_features": model.n_features,
-        }
-
-    def class_sums(self, prog: Dict[str, Any], x: np.ndarray) -> np.ndarray:
-        c = self.capacity
-        B = x.shape[0]
-        packed = pack_features(
-            jnp.asarray(self._pad_x(x)), c.feature_capacity, c.batch_words
-        )
-        sums = self._fn(
-            prog["imem"], prog["n_inst"], packed, jnp.int32(B),
-            m_cap=c.class_capacity,
-        )
-        return np.asarray(sums)[: prog["n_classes"], :B].T
-
-
-class PlanExecutor(_ExecutorBase):
-    """Decoded-plan executor: gather + segmented min/sum (beyond-paper)."""
-
-    name = "plan"
-
-    def __init__(self, capacity: ServeCapacity):
-        super().__init__(capacity)
-        self._fn = _private_jit(
-            plan_class_sums.__wrapped__,
-            static_argnames=("n_clause_cap", "m_cap"),
-        )
-
-    def program(self, model: CompressedModel) -> Dict[str, Any]:
-        c = self.capacity
-        plan = decode_to_plan(model)
-        _check(plan.n_includes <= c.instruction_capacity, "n_includes",
-               plan.n_includes, c.instruction_capacity,
-               "instruction_capacity")
-        _check(plan.n_clauses_total <= c.clause_total_capacity,
-               "total clauses", plan.n_clauses_total,
-               c.clause_total_capacity, "clause_capacity")
-        _check(model.n_classes <= c.class_capacity, "n_classes",
-               model.n_classes, c.class_capacity, "class_capacity")
-        _check(model.n_features <= c.feature_capacity, "n_features",
-               model.n_features, c.feature_capacity, "feature_capacity")
-        li, ci, cc, cp = pad_plan(
-            plan, c.instruction_capacity, c.clause_total_capacity
-        )
-        return {
-            "li": jnp.asarray(li), "ci": jnp.asarray(ci),
-            "cc": jnp.asarray(cc), "cp": jnp.asarray(cp),
-            "n_classes": model.n_classes,
-            "n_features": model.n_features,
-        }
-
-    def class_sums(self, prog: Dict[str, Any], x: np.ndarray) -> np.ndarray:
-        c = self.capacity
-        B = x.shape[0]
-        lits = literals(jnp.asarray(self._pad_x(x)))  # [B_cap, 2*F_cap]
-        sums = self._fn(
-            prog["li"], prog["ci"], prog["cc"], prog["cp"], lits,
-            n_clause_cap=c.clause_total_capacity, m_cap=c.class_capacity,
-        )
-        return np.asarray(sums)[:B, : prog["n_classes"]]
-
-
-def _popcount_engine_xla(lit_idx, last, mask_pos, mask_neg, x_staged):
-    """Staged features -> packed interleaved literals -> popcount sums."""
-    return tm_popcount_xla.__wrapped__(
-        lit_idx, last, mask_pos, mask_neg, pack_literals(x_staged)
-    )
-
-
-def _popcount_engine_pallas(
-    lit_idx, last, mask_pos, mask_neg, x_staged,
-    *, block_instructions, block_words, interpret,
-):
-    return tm_popcount.__wrapped__(
-        lit_idx, last, mask_pos, mask_neg, pack_literals(x_staged),
-        block_instructions=block_instructions, block_words=block_words,
-        interpret=interpret,
-    )
-
-
-class PopcountExecutor(_ExecutorBase):
-    """Popcount bitplane executor (kernels/tm_popcount): packed clause
-    words end-to-end, class sums via ``lax.population_count`` against the
-    program's polarity-bank selection bitplanes.
-
-    The program (operand vectors + class masks) is pushed to the device
-    ONCE at ``program()`` (``jax.device_put``); each engine call ships only
-    the staging block, donated to XLA so the feature buffer is recycled
-    across flushes rather than accumulating.
-    """
-
-    name = "popcount"
-
-    def __init__(self, capacity: ServeCapacity, implementation: str | None = None):
-        super().__init__(capacity)
-        if implementation is None:
-            # the Pallas kernel is the TPU artifact; its interpret-mode
-            # emulation loses to the bit-exact XLA twin everywhere else
-            implementation = (
-                "pallas" if jax.default_backend() == "tpu" else "xla"
-            )
-        if implementation not in ("pallas", "xla"):
-            raise ValueError(
-                f"unknown implementation {implementation!r}; "
-                f"choose 'pallas' or 'xla'"
-            )
-        self.implementation = implementation
-        if implementation == "pallas":
-            bi, bw = choose_blocks(
-                capacity.instruction_capacity, capacity.batch_words
-            )
-            engine = functools.partial(
-                _popcount_engine_pallas,
-                block_instructions=bi, block_words=bw,
-                interpret=jax.default_backend() != "tpu",
-            )
-        else:
-            engine = _popcount_engine_xla
-        self._fn = _private_jit(engine, donate_argnums=(4,))
-
-    def program(self, model: CompressedModel) -> Dict[str, Any]:
-        c = self.capacity
-        _check(model.n_classes <= c.class_capacity, "n_classes",
-               model.n_classes, c.class_capacity, "class_capacity")
-        _check(model.n_features <= c.feature_capacity, "n_features",
-               model.n_features, c.feature_capacity, "feature_capacity")
-        plan = decode_to_plan(model)
-        _check(plan.n_includes <= c.instruction_capacity, "n_includes",
-               plan.n_includes, c.instruction_capacity,
-               "instruction_capacity")
-        lit_idx, last, mask_pos, mask_neg = plan_to_popcount_operands(
-            plan, c.instruction_capacity, c.class_capacity,
-            l2_cap=2 * c.feature_capacity,
-        )
-        # the reprogram is pure data movement: resident on-device until the
-        # next swap, never retraced (fixed capacity shapes)
-        return {
-            "lit_idx": jax.device_put(lit_idx),
-            "last": jax.device_put(last),
-            "mask_pos": jax.device_put(mask_pos),
-            "mask_neg": jax.device_put(mask_neg),
-            "n_classes": model.n_classes,
-            "n_features": model.n_features,
-        }
-
-    def class_sums(self, prog: Dict[str, Any], x: np.ndarray) -> np.ndarray:
-        B = x.shape[0]
-        # fresh device copy of the staging block; the engine donates it
-        staged = jnp.asarray(self._pad_x(x))
-        sums = self._fn(
-            prog["lit_idx"], prog["last"],
-            prog["mask_pos"], prog["mask_neg"], staged,
-        )
-        return np.asarray(sums)[: prog["n_classes"], :B].T
-
-
-class ShardedExecutor(_ExecutorBase):
-    """dist.tm_sharded clause-major executor on a (data, model) mesh.
-
-    Built once at CAPACITY shape (classes padded to the model axis, clause
-    tables at clause/include capacity); programming a model fills the
-    fixed-shape tables, so swaps never touch the compiled shard_map.
-    """
-
-    name = "sharded"
-
-    def __init__(self, capacity: ServeCapacity, mesh=None):
-        super().__init__(capacity)
-        if mesh is None:
-            mesh = jax.make_mesh((1, 1), ("data", "model"))
-        self.mesh = mesh
-        cfg = TMShardedConfig(
-            name="serve", n_classes=capacity.class_capacity,
-            n_clauses=capacity.clause_capacity,
-            n_features=capacity.feature_capacity,
-            batch=capacity.batch_capacity,
-            include_cap=capacity.include_capacity,
-        )
-        fn, _ = build_tm_sharded(cfg, mesh)
-        # route through _private_jit like every other backend so the
-        # compile_cache_size() == 1 contract is enforced uniformly (a bare
-        # jax.jit over the closure worked, but only by accident of
-        # build_tm_sharded returning a fresh callable)
-        self._fn = _private_jit(fn)
-        self._Mp = _pad_to(
-            capacity.class_capacity, _axis_sizes(mesh).get("model", 1)
-        )
-
-    def program(self, model: CompressedModel) -> Dict[str, Any]:
-        c = self.capacity
-        plan = decode_to_plan(model)
-        _check(model.n_classes <= c.class_capacity, "n_classes",
-               model.n_classes, c.class_capacity, "class_capacity")
-        _check(model.n_features <= c.feature_capacity, "n_features",
-               model.n_features, c.feature_capacity, "feature_capacity")
-        try:
-            idx, pol = fill_clause_tables(
-                plan, self._Mp, c.clause_capacity, c.include_capacity,
-                2 * c.feature_capacity,
-            )
-        except ValueError as e:
-            raise ValueError(
-                f"{e}; resynthesize with a larger "
-                f"ServeCapacity.clause_capacity / include_capacity"
-            ) from None
-        return {
-            "idx": jnp.asarray(idx), "pol": jnp.asarray(pol),
-            "n_classes": model.n_classes,
-            "n_features": model.n_features,
-        }
-
-    def class_sums(self, prog: Dict[str, Any], x: np.ndarray) -> np.ndarray:
-        c = self.capacity
-        B = x.shape[0]
-        lits = np.asarray(
-            literals(jnp.asarray(self._pad_x(x), bool))
-        ).astype(np.int8)  # [B_cap, 2*F_cap]
-        lits1 = np.concatenate(
-            [lits, np.ones((c.batch_capacity, 1), np.int8)], axis=1
-        )
-        sums = self._fn(prog["idx"], prog["pol"], jnp.asarray(lits1))
-        return np.asarray(sums)[:B, : prog["n_classes"]]
-
-
-BACKENDS = {
-    "interp": InterpExecutor,
-    "plan": PlanExecutor,
-    "sharded": ShardedExecutor,
-    "popcount": PopcountExecutor,
-}
+# legacy spellings
+ServeCapacity = CapacityPlan
+InterpExecutor = InterpEngine
+PlanExecutor = PlanEngine
+ShardedExecutor = ShardedEngine
+PopcountExecutor = PopcountEngine
+_ExecutorBase = EngineBase
+BACKENDS = ENGINES
 
 
 def make_executor(
-    backend: str | _ExecutorBase, capacity: ServeCapacity, mesh=None
-) -> _ExecutorBase:
-    """'interp' | 'plan' | 'sharded' | 'popcount' (or a built instance)."""
-    if isinstance(backend, _ExecutorBase):
-        return backend
-    if backend not in BACKENDS:
-        raise ValueError(
-            f"unknown backend {backend!r}; choose from {sorted(BACKENDS)}"
-        )
-    if backend == "sharded":
-        return ShardedExecutor(capacity, mesh=mesh)
-    return BACKENDS[backend](capacity)
+    backend: "str | EngineBase", capacity: CapacityPlan, mesh=None
+) -> EngineBase:
+    """Deprecated: use ``repro.accel.make_engine`` (uniform plugin
+    construction; mesh forwarding is capability-flag-driven)."""
+    return make_engine(backend, capacity, mesh=mesh)
+
+
+__all__ = [
+    "BACKENDS",
+    "CapacityExceeded",
+    "InterpExecutor",
+    "PlanExecutor",
+    "PopcountExecutor",
+    "ServeCapacity",
+    "ShardedExecutor",
+    "make_executor",
+]

@@ -1,27 +1,39 @@
 """Named model slots with hot-swap — the Fig-8 reprogram step as an API.
 
-A slot holds one programmed model (the executor backend's fixed-capacity
-buffers).  Installing into an existing slot is the runtime recalibration
-path: pure data movement, version bump, no recompilation (the server
-asserts the executor's compile cache stays at 1).
+A slot holds one programmed model (the engine's fixed-capacity buffers).
+Installing into an existing slot is the runtime recalibration path: pure
+data movement, version bump, no recompilation (the server asserts the
+engine's compile cache stays at 1).
+
+``install`` accepts a bare ``CompressedModel``, a ``TMProgram`` artifact,
+or the artifact's raw ``to_bytes()`` blob — the reprogram-over-the-wire
+path: a training node ships bytes, the serving node integrity-checks and
+installs them, and the slot entry records which artifact (checksum and
+capacity stamp) it is running.
 
 Every install records *provenance* (who produced the model: initial
 deploy, a recal pipeline, a rollback) and the previous entries are kept in
-a bounded per-slot history, so the recal controller can roll a bad swap
-back WITHOUT re-programming: the old entry's buffers are still alive and
-are reinstalled as-is.
+a bounded per-slot history (depth is a constructor argument), so the recal
+controller can roll a bad swap back WITHOUT re-programming: the old
+entry's buffers are still alive and are reinstalled as-is.  A rollback's
+provenance nests the restored entry's own provenance, so a
+rollback-of-a-rollback reads as the full chain, e.g.
+``rollback:v4->v3(rollback:v2->v1(deploy))``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
+from ..accel.program import TMProgram
 from ..core.compress import CompressedModel
 
-# Previous versions retained per slot for rollback / provenance queries.
-HISTORY_DEPTH = 4
+# default retained previous versions per slot (override per registry)
+DEFAULT_HISTORY_DEPTH = 4
+
+Installable = Union[CompressedModel, TMProgram, bytes]
 
 
 @dataclasses.dataclass
@@ -32,6 +44,7 @@ class SlotEntry:
     version: int
     installed_at: float
     provenance: str = "install"
+    artifact: Optional[TMProgram] = None  # set when installed from one
 
     @property
     def n_classes(self) -> int:
@@ -43,17 +56,34 @@ class SlotEntry:
 
 
 class ModelRegistry:
-    """slot name -> programmed model, for one executor backend."""
+    """slot name -> programmed model, for one engine."""
 
-    def __init__(self, executor):
+    def __init__(self, executor, history_depth: int = DEFAULT_HISTORY_DEPTH):
+        if history_depth < 1:
+            raise ValueError(
+                f"history_depth must be >= 1 (rollback needs at least one "
+                f"retained version), got {history_depth}"
+            )
         self._executor = executor
+        self.history_depth = history_depth
         self._slots: Dict[str, SlotEntry] = {}
         self._history: Dict[str, List[SlotEntry]] = {}
 
     def install(
-        self, name: str, model: CompressedModel, provenance: str = "install"
+        self, name: str, model: Installable, provenance: str = "install"
     ) -> SlotEntry:
-        """Program ``model`` into ``name`` (create or hot-swap)."""
+        """Program ``model`` into ``name`` (create or hot-swap).
+
+        ``model`` may be a ``TMProgram`` artifact or its serialized bytes
+        (integrity-checked by ``TMProgram.from_bytes``); the underlying
+        ``CompressedModel`` is what gets programmed.
+        """
+        artifact: Optional[TMProgram] = None
+        if isinstance(model, (bytes, bytearray, memoryview)):
+            model = TMProgram.from_bytes(model)
+        if isinstance(model, TMProgram):
+            artifact = model
+            model = artifact.model
         prev = self._slots.get(name)
         entry = SlotEntry(
             name=name,
@@ -62,6 +92,7 @@ class ModelRegistry:
             version=(prev.version + 1) if prev else 1,
             installed_at=time.time(),
             provenance=provenance,
+            artifact=artifact,
         )
         if prev is not None:
             self._push_history(name, prev)
@@ -74,7 +105,9 @@ class ModelRegistry:
         Pure data movement squared: the previous entry's programmed
         buffers are reused verbatim — no decode, no reprogram.  The
         version still advances monotonically so observers can tell a
-        rollback from time going backwards.
+        rollback from time going backwards, and the provenance nests the
+        restored entry's own provenance (the full chain survives repeated
+        rollbacks).
         """
         hist = self._history.get(name)
         if not hist:
@@ -89,7 +122,11 @@ class ModelRegistry:
             program=prev.program,
             version=cur.version + 1,
             installed_at=time.time(),
-            provenance=f"rollback:v{cur.version}->v{prev.version}",
+            provenance=(
+                f"rollback:v{cur.version}->v{prev.version}"
+                f"({prev.provenance})"
+            ),
+            artifact=prev.artifact,
         )
         self._push_history(name, cur)
         self._slots[name] = entry
@@ -98,7 +135,7 @@ class ModelRegistry:
     def _push_history(self, name: str, entry: SlotEntry) -> None:
         hist = self._history.setdefault(name, [])
         hist.append(entry)
-        del hist[:-HISTORY_DEPTH]
+        del hist[: -self.history_depth]
 
     def previous(self, name: str) -> Optional[SlotEntry]:
         """The entry a ``rollback(name)`` would reinstall (None if none)."""

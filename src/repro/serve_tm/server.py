@@ -2,11 +2,18 @@
 accelerator (the ROADMAP's "serve heavy traffic" north star applied to the
 paper's Fig-4/Fig-8 engine).
 
-    server = TMServer(ServeCapacity(...), backend="plan")
+    server = TMServer(CapacityPlan(...), backend="plan")
     server.register("gas", model)            # program a named slot
     h = server.submit("gas", x)              # queue {0,1}[b, F] datapoints
     server.flush()                           # batch + run + demux
     preds = h.result()
+
+New deployments should prefer the ``repro.accel.Accelerator`` façade,
+which negotiates capacity from the model population and adds the
+portable ``TMProgram`` artifact path; ``TMServer`` remains the serving
+core underneath it.  Engines come from the ``repro.accel`` plugin
+registry: pass ``backend=<name>`` to pin one, a built engine via
+``engine=``, or neither to auto-select the fastest eligible plugin.
 
 Tenancy: each slot is one model; requests are batched PER SLOT (models
 cannot share an engine pass) but all slots share the single compiled
@@ -15,6 +22,8 @@ models claim.  ``register`` on a live slot is the hot-swap/recalibration
 path: queued traffic for that slot is drained under the OLD program first,
 then the new model is installed; the engine is never recompiled, and
 ``flush`` asserts ``compile_cache_size() == 1`` after every drain.
+``register`` also accepts a ``TMProgram`` artifact or its serialized
+bytes (reprogram-over-the-wire).
 """
 
 from __future__ import annotations
@@ -24,23 +33,34 @@ from typing import Optional
 
 import numpy as np
 
-from ..core.compress import CompressedModel
+from ..accel.capacity import CapacityPlan
+from ..accel.engine import EngineBase, make_engine, select_engine
 from .batching import Batcher, RequestHandle
-from .executors import ServeCapacity, make_executor
 from .metrics import ServeMetrics
-from .registry import ModelRegistry, SlotEntry
+from .registry import DEFAULT_HISTORY_DEPTH, Installable, ModelRegistry, SlotEntry
 
 
 class TMServer:
     def __init__(
         self,
-        capacity: Optional[ServeCapacity] = None,
-        backend: str = "interp",
+        capacity: Optional[CapacityPlan] = None,
+        backend: "Optional[str | EngineBase]" = None,
         mesh=None,
+        *,
+        engine: "Optional[str | EngineBase]" = None,
+        engine_options: Optional[dict] = None,
+        history_depth: int = DEFAULT_HISTORY_DEPTH,
     ):
-        self.capacity = capacity or ServeCapacity()
-        self.executor = make_executor(backend, self.capacity, mesh=mesh)
-        self.registry = ModelRegistry(self.executor)
+        self.capacity = capacity if capacity is not None else CapacityPlan()
+        chosen = engine if engine is not None else backend
+        if chosen is None:
+            chosen = select_engine(self.capacity, mesh=mesh)
+        self.executor = make_engine(
+            chosen, self.capacity, mesh=mesh, **(engine_options or {})
+        )
+        self.registry = ModelRegistry(
+            self.executor, history_depth=history_depth
+        )
         self.batcher = Batcher(self.capacity.batch_capacity)
         self.metrics = ServeMetrics()
         self._next_rid = 0
@@ -50,16 +70,18 @@ class TMServer:
     def register(
         self,
         slot: str,
-        model: CompressedModel,
+        model: Installable,
         provenance: str = "install",
     ) -> SlotEntry:
         """Install ``model`` into ``slot``; hot-swaps live slots.
 
-        Traffic already queued for the slot is drained under the OLD
-        program first (in-flight requests keep the model they were
-        submitted against), then the swap is pure data movement.
-        ``provenance`` records who produced the model (e.g. the recal
-        pipeline tags its swaps ``recal:<reason>``).
+        ``model`` may be a ``CompressedModel``, a ``TMProgram`` artifact,
+        or artifact bytes fresh off the wire.  Traffic already queued for
+        the slot is drained under the OLD program first (in-flight
+        requests keep the model they were submitted against), then the
+        swap is pure data movement.  ``provenance`` records who produced
+        the model (e.g. the recal pipeline tags its swaps
+        ``recal:<reason>``).
         """
         if slot in self.registry and self.batcher.pending_rows(slot):
             self._flush_slot(slot)

@@ -227,7 +227,8 @@ def test_registry_rollback_and_provenance():
     entry = server.rollback("s")
     assert entry.version == 3  # versions stay monotonic
     assert entry.model is m1
-    assert entry.provenance == "rollback:v2->v1"
+    # provenance nests the restored entry's own provenance (full chain)
+    assert entry.provenance == "rollback:v2->v1(deploy)"
     assert server.metrics.rollbacks == 1
     assert server.metrics.summary()["rollbacks"] == 1
 
