@@ -112,7 +112,66 @@ def _kernels_schema(data: dict):
     return errs
 
 
-SCHEMA_CHECKS = {"BENCH_tm_kernels.json": _kernels_schema}
+def _serve_schema(data: dict):
+    """BENCH_tm_serve.json-specific invariants -> error strings.
+
+    Beyond per-backend throughput/bit-exactness, the continuous-batching
+    overload scenario must report every priority lane's p50/p99 + SLO
+    attainment and satisfy the lane-scheduling acceptance shape: the
+    critical lane beats the single-lane FIFO baseline's p99, sheds
+    nothing, and the low lane absorbs the overload (sheds and/or
+    admission rejects)."""
+    errs = []
+    backends = data.get("backends")
+    if not isinstance(backends, dict) or not backends:
+        errs.append("backends must be a non-empty object")
+    else:
+        for b, s in backends.items():
+            if s.get("bit_exact") is not True:
+                errs.append(f"backends.{b} not bit-exact")
+            if s.get("compile_cache_size") != 1:
+                errs.append(f"backends.{b} compile_cache_size != 1")
+    ov = data.get("overload")
+    if not isinstance(ov, dict):
+        return errs + ["missing 'overload' scenario"]
+    for key in ("offered_load_x", "offered_rows", "fifo_p99_us",
+                "critical_p99_us", "sheds", "admission_rejects"):
+        if not isinstance(ov.get(key), (int, float)):
+            errs.append(f"overload.{key} missing/non-numeric")
+    lanes = ov.get("lanes")
+    if not isinstance(lanes, dict):
+        return errs + ["overload.lanes missing"]
+    for lane in ("critical", "high", "normal", "low"):
+        stats = lanes.get(lane)
+        if not isinstance(stats, dict):
+            errs.append(f"overload.lanes.{lane} missing")
+            continue
+        for key in ("completed", "shed", "rejected", "deadline_miss"):
+            if not isinstance(stats.get(key), int):
+                errs.append(f"overload.lanes.{lane}.{key} missing")
+        for pct in ("queue_delay_us", "latency_us"):
+            if not {"p50", "p99"} <= set(stats.get(pct, {})):
+                errs.append(f"overload.lanes.{lane}.{pct} lacks p50/p99")
+        if not isinstance(stats.get("slo_attainment"), (int, float)):
+            errs.append(f"overload.lanes.{lane}.slo_attainment missing")
+    if errs:
+        return errs
+    if lanes["critical"]["shed"] != 0:
+        errs.append("overload shed critical traffic (must be 0)")
+    if lanes["low"]["shed"] + lanes["low"]["rejected"] <= 0:
+        errs.append("overload produced no low-lane sheds/rejects")
+    if ov["critical_p99_us"] >= ov["fifo_p99_us"]:
+        errs.append(
+            f"critical lane p99 {ov['critical_p99_us']:.0f}us did not beat "
+            f"the FIFO baseline p99 {ov['fifo_p99_us']:.0f}us"
+        )
+    return errs
+
+
+SCHEMA_CHECKS = {
+    "BENCH_tm_kernels.json": _kernels_schema,
+    "BENCH_tm_serve.json": _serve_schema,
+}
 
 
 def validate_schema(name: str, data) -> list:

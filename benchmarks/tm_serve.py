@@ -1,7 +1,10 @@
 """Serving-subsystem benchmark: multi-tenant batched throughput + hot-swap
-under traffic, per engine, plus the ``repro.accel`` artifact deploy path
-(compile -> serialize -> load -> first prediction).  Emits
-``BENCH_tm_serve.json`` (CWD) and the harness CSV rows.
+under live scheduler traffic, per engine, plus the ``repro.accel``
+artifact deploy path (compile -> serialize -> load -> first prediction)
+and the continuous-batching OVERLOAD scenario (10x offered load, mixed
+priority lanes, deadline shedding, admission control) compared against a
+single-lane FIFO baseline.  Emits ``BENCH_tm_serve.json`` (CWD) and the
+harness CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run --only tm_serve
 
@@ -20,9 +23,24 @@ import numpy as np
 from repro.accel import Accelerator, TMProgram, engine_names
 from repro.core import TMConfig, batch_class_sums, state_from_actions
 from repro.core.compress import encode
-from repro.serve_tm import ServeCapacity, TMServer
+from repro.serve_tm import DeadlineExceeded, ServeCapacity, TMServer
 
 OUT_PATH = "BENCH_tm_serve.json"
+
+# overload traffic mix: fraction of offered requests per priority lane
+OVERLOAD_MIX = {"critical": 0.1, "high": 0.2, "normal": 0.4, "low": 0.3}
+
+# per-lane deadline budget as a multiple of the estimated backlog drain
+# time; low's budget is 1/10th of the drain (the "10x offered load"
+# definition: ten times more backlog than its SLO horizon can absorb).
+# The non-low lanes also get an absolute floor so a scheduling hiccup on
+# a busy CI box can't shed traffic the scenario needs completed.
+OVERLOAD_DEADLINE_MULT = {
+    "critical": 3.0, "high": 2.0, "normal": 1.5, "low": 0.1,
+}
+OVERLOAD_DEADLINE_FLOOR_S = {
+    "critical": 0.25, "high": 0.25, "normal": 0.25, "low": 0.0,
+}
 
 
 def _tiny() -> bool:
@@ -65,22 +83,38 @@ def _bench_backend(backend: str, capacity: ServeCapacity, tiny: bool) -> dict:
                 0, 2, (int(rng.integers(1, max_rows + 1)), cfg.n_features)
             ).astype(np.uint8)
             handles.append((server.submit("tenant", x), cfg, acts, x))
-        server.flush()
         for h, c, a, x in handles:
-            if not np.array_equal(h.result(), _oracle_preds(c, a, x)):
+            if not np.array_equal(h.wait(timeout=120.0),
+                                  _oracle_preds(c, a, x)):
                 bit_exact = False
 
     # warm the engine outside the metrics window (first call compiles);
     # the direct class_sums hook bypasses the queue and records nothing
     server.class_sums("tenant", np.zeros((1, cfg_a.n_features), np.uint8))
 
-    traffic(cfg_a, acts_a, n_requests)
-    # hot swap mid-traffic: queued rows drain under A, then B installs
-    for _ in range(4):
-        x = rng.integers(0, 2, (5, cfg_a.n_features)).astype(np.uint8)
-        server.submit("tenant", x)
-    server.register("tenant", model_b)
-    traffic(cfg_b, acts_b, n_requests)
+    # traffic rides the continuous-batching loop: no flush() anywhere —
+    # the scheduler forms every batch and completes every handle
+    server.start()
+    try:
+        traffic(cfg_a, acts_a, n_requests)
+        # LIVE hot swap: queued rows drain under A (the swap holds the
+        # scheduler lock across drain + install), then B takes over
+        with server.scheduler.lock:
+            pend = [
+                (server.submit(
+                    "tenant",
+                    rng.integers(0, 2, (5, cfg_a.n_features)).astype(
+                        np.uint8
+                    ),
+                ))
+                for _ in range(4)
+            ]
+            server.register("tenant", model_b)
+        for h in pend:
+            h.wait(timeout=120.0)
+        traffic(cfg_b, acts_b, n_requests)
+    finally:
+        server.stop()
 
     summary = server.metrics.summary()
     summary["compile_cache_size"] = server.compile_cache_size()
@@ -126,6 +160,150 @@ def _bench_artifact_path(backend, capacity, cfg, acts, model) -> dict:
     }
 
 
+def _overload_trace(rng, capacity, tiny):
+    """Deterministic mixed-priority burst: ~10x more rows than the low
+    lane's SLO horizon can absorb, request sizes of a quarter batch."""
+    n_batches = 8 if tiny else 20
+    rows_per_req = max(1, capacity.batch_capacity // 4)
+    n_requests = n_batches * capacity.batch_capacity // rows_per_req
+    lanes = []
+    for lane, frac in OVERLOAD_MIX.items():
+        lanes.extend([lane] * max(1, round(frac * n_requests)))
+    lanes = lanes[:n_requests]
+    rng.shuffle(lanes)
+    return lanes, rows_per_req
+
+
+def _drain_all_terminal(handles):
+    served = 0
+    for h in handles:
+        try:
+            h.wait(timeout=300.0)
+            served += 1
+        except DeadlineExceeded:
+            pass
+    return served
+
+
+def _bench_overload(capacity, tiny: bool) -> dict:
+    """The continuous-batching overload scenario: a burst of ~10x offered
+    load in mixed priority lanes with per-lane deadlines, served by the
+    running scheduler loop, vs the SAME burst through a single-lane FIFO
+    baseline (all-normal, no deadlines).  The lane run must keep the
+    critical lane fast (p99 below the FIFO p99) and shed-free while the
+    low lane sheds/rejects — the edge-SLO shape the runtime exists for."""
+    rng = np.random.default_rng(21)
+    dims = (6, 12, 48) if tiny else (8, 16, 64)
+    cfg, acts, model = _random_model(rng, *dims)
+    lanes, rows_per_req = _overload_trace(rng, capacity, tiny)
+    offered_rows = len(lanes) * rows_per_req
+    blocks = [
+        rng.integers(0, 2, (rows_per_req, cfg.n_features)).astype(np.uint8)
+        for _ in lanes
+    ]
+
+    def fresh_server(**kw):
+        server = TMServer(capacity, backend="plan", **kw)
+        server.register("edge", model)
+        # warm (compile) outside every timing window
+        server.class_sums("edge", np.zeros((1, cfg.n_features), np.uint8))
+        return server
+
+    # calibrate one full-batch engine pass -> backlog drain estimate
+    server = fresh_server()
+    xb = rng.integers(
+        0, 2, (capacity.batch_capacity, cfg.n_features)
+    ).astype(np.uint8)
+    t_batch = min(
+        _timed(lambda: server.class_sums("edge", xb)) for _ in range(3)
+    )
+    est_drain_s = (offered_rows / capacity.batch_capacity) * t_batch * 1.5
+
+    def lane_budget_ms(lane):
+        return (
+            OVERLOAD_DEADLINE_MULT[lane] * est_drain_s
+            + OVERLOAD_DEADLINE_FLOOR_S[lane]
+        ) * 1e3
+
+    # -- FIFO baseline: same burst, one lane, no deadlines ------------------
+    server.start()
+    try:
+        with server.scheduler.lock:  # queue the whole burst, then serve
+            fifo_handles = [server.submit("edge", x) for x in blocks]
+        _drain_all_terminal(fifo_handles)
+    finally:
+        server.stop()
+    fifo = server.metrics.summary()["lanes"]["normal"]
+
+    # -- the lane run: mixed priorities, deadlines, admission control -------
+    # the low lane also gets a tight queue-depth budget so sustained
+    # overload produces structured admission rejects, not just sheds
+    server = fresh_server(
+        lane_depth_rows={"low": 2 * capacity.batch_capacity}
+    )
+    server.start()
+    handles = []
+    try:
+        import asyncio
+
+        from repro.serve_tm import Overloaded
+
+        async def burst():
+            with server.scheduler.lock:
+                for lane, x in zip(lanes, blocks):
+                    try:
+                        handles.append(await server.async_submit(
+                            "edge", x, priority=lane,
+                            timeout_ms=lane_budget_ms(lane),
+                        ))
+                    except Overloaded:
+                        pass  # counted by the server's admission metrics
+
+        asyncio.run(burst())
+        _drain_all_terminal(handles)
+    finally:
+        server.stop()
+    summary = server.metrics.summary()
+
+    lane_stats = summary["lanes"]
+    return {
+        "backend": "plan",
+        "offered_requests": len(lanes),
+        "offered_rows": offered_rows,
+        "rows_per_request": rows_per_req,
+        "offered_load_x": 1.0 / OVERLOAD_DEADLINE_MULT["low"],
+        "mix": OVERLOAD_MIX,
+        "t_batch_us": t_batch * 1e6,
+        "est_drain_ms": est_drain_s * 1e3,
+        "deadline_budget_ms": {p: lane_budget_ms(p) for p in OVERLOAD_MIX},
+        "fifo_baseline": {
+            "completed": fifo["completed"],
+            "p50_us": fifo["latency_us"]["p50"],
+            "p99_us": fifo["latency_us"]["p99"],
+        },
+        "lanes": lane_stats,
+        "sheds": summary["sheds"],
+        "admission_rejects": summary["admission_rejects"],
+        "deadline_misses": summary["deadline_misses"],
+        "critical_p99_us": lane_stats["critical"]["latency_us"]["p99"],
+        "fifo_p99_us": fifo["latency_us"]["p99"],
+        "critical_vs_fifo_speedup": (
+            fifo["latency_us"]["p99"]
+            / max(lane_stats["critical"]["latency_us"]["p99"], 1e-9)
+        ),
+        "slo_attainment": {
+            p: lane_stats[p]["slo_attainment"] for p in OVERLOAD_MIX
+        },
+        "compile_cache_size": server.compile_cache_size(),
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
 def run():
     tiny = _tiny()
     capacity = ServeCapacity(
@@ -165,6 +343,18 @@ def run():
             f";art_load_us={art['load_us']:.0f}"
             f";art_bytes={art['bytes']}",
         ))
+    overload = _bench_overload(capacity, tiny)
+    report["overload"] = overload
+    rows.append((
+        "tm_serve_overload",
+        f"{overload['critical_p99_us']:.1f}",
+        f"fifo_p99_us={overload['fifo_p99_us']:.0f}"
+        f";speedup={overload['critical_vs_fifo_speedup']:.1f}"
+        f";crit_shed={overload['lanes']['critical']['shed']}"
+        f";low_shed={overload['lanes']['low']['shed']}"
+        f";rejects={overload['admission_rejects']}"
+        f";crit_slo={overload['slo_attainment']['critical']:.2f}",
+    ))
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=1)
     return rows

@@ -14,7 +14,10 @@ state, and the loop asserts ``compile_cache_size() == 1`` throughout.
 gate, auto-rollback — see examples/online_recal.py and repro.recal.)
 
 Run:  PYTHONPATH=src python examples/recalibration_loop.py
+      EXAMPLES_TINY=1 shrinks training/traffic for CI smoke runs.
 """
+
+import os
 
 import numpy as np
 import jax
@@ -25,15 +28,20 @@ from repro.core import TMConfig, fit, include_actions, init_state
 from repro.core.compress import encode
 from repro.data.pipeline import TM_DATASETS, booleanized_tm_dataset
 
+TINY = os.environ.get("EXAMPLES_TINY", "0") == "1"
 SPEC = TM_DATASETS["gas"]
 RETRAIN_THRESHOLD = 0.90  # accuracy trigger for the training node
 SLOT = "edge"
+N_TRAIN = 300 if TINY else 1500
+N_TRAFFIC = 96 if TINY else 320
+EPOCHS = 2 if TINY else 8
+DRIFTS = [0.0, 0.5, 1.2] if TINY else [0.0, 0.15, 0.3, 0.5, 0.8, 1.2]
 
 
 def train_node(drift: float, booleanizer, seed: int):
     """The Fig-8 Model Training Node: (re)train on the CURRENT distribution."""
     xb, y, booler = booleanized_tm_dataset(
-        SPEC, 1500, seed=seed, drift=drift, booleanizer=booleanizer
+        SPEC, N_TRAIN, seed=seed, drift=drift, booleanizer=booleanizer
     )
     cfg = TMConfig(
         n_classes=SPEC.n_classes, n_clauses=60,
@@ -41,7 +49,7 @@ def train_node(drift: float, booleanizer, seed: int):
     )
     state = init_state(cfg, jax.random.key(seed))
     state = fit(cfg, state, jax.random.key(seed + 1), jnp.asarray(xb),
-                jnp.asarray(y), epochs=8, batch=150)
+                jnp.asarray(y), epochs=EPOCHS, batch=150)
     return encode(cfg, np.asarray(include_actions(cfg, state))), booler
 
 
@@ -57,11 +65,11 @@ def main():
     print(f"engine={acc.engine.name}; negotiated plan {acc.plan.as_dict()}")
     print(f"deployed initial model; slot v{acc.registry.get(SLOT).version}")
 
-    for epoch, drift in enumerate([0.0, 0.15, 0.3, 0.5, 0.8, 1.2]):
+    for epoch, drift in enumerate(DRIFTS):
         # edge sensor traffic under current drift — the batcher chunks the
-        # 320 datapoints into engine words; no manual 32-row slicing
+        # datapoints into engine words; no manual 32-row slicing
         xb, y, _ = booleanized_tm_dataset(
-            SPEC, 320, seed=100 + epoch, drift=drift, booleanizer=booler
+            SPEC, N_TRAFFIC, seed=100 + epoch, drift=drift, booleanizer=booler
         )
         score = float((acc.infer(SLOT, xb) == y).mean())
         marker = ""
@@ -73,7 +81,8 @@ def main():
             blob = acc.compile(model).to_bytes()
             acc.load(SLOT, blob, provenance=f"recal:drift={drift}")
             xb2, y2, _ = booleanized_tm_dataset(
-                SPEC, 320, seed=300 + epoch, drift=drift, booleanizer=booler
+                SPEC, N_TRAFFIC, seed=300 + epoch, drift=drift,
+                booleanizer=booler,
             )
             score2 = float((acc.infer(SLOT, xb2) == y2).mean())
             marker = (f" -> RECALIBRATED ({len(blob)}B artifact), "

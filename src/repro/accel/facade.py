@@ -22,9 +22,13 @@ provisioned); pass ``engine=`` to pin one, ``engine_options=`` for
 per-engine knobs (e.g. ``{"implementation": "pallas"}``).
 
 Everything underneath is the existing serving machinery: an engine plugin
-(``accel.engines``), the versioned slot registry, the dynamic batcher and
-metrics (``serve_tm``).  The façade IS a valid ``RecalController`` server
-— ``repro.recal`` runs against it unchanged.
+(``accel.engines``), the versioned slot registry, the priority-lane
+batcher, the continuous-batching scheduler and metrics (``serve_tm``).
+The async front door is exposed too: ``start()``/``stop()`` run the
+scheduler loop and ``async_submit(slot, x, priority=, timeout_ms=)``
+serves admission-controlled deadline-aware traffic without anyone calling
+``flush()``.  The façade IS a valid ``RecalController`` server —
+``repro.recal`` runs against it unchanged, with a live loop or without.
 """
 
 from __future__ import annotations
@@ -124,8 +128,24 @@ class Accelerator:
     def rollback(self, slot: str):
         return self.server.rollback(slot)
 
-    def submit(self, slot: str, x: np.ndarray):
-        return self.server.submit(slot, x)
+    def submit(self, slot: str, x: np.ndarray, **kw):
+        return self.server.submit(slot, x, **kw)
+
+    async def async_submit(self, slot: str, x: np.ndarray, **kw):
+        """Admission-controlled submit for async callers (priority lanes,
+        deadlines); requires the scheduler loop (``start()``)."""
+        return await self.server.async_submit(slot, x, **kw)
+
+    def start(self) -> None:
+        """Start the continuous-batching scheduler loop."""
+        self.server.start()
+
+    def stop(self, drain: bool = True) -> None:
+        self.server.stop(drain=drain)
+
+    @property
+    def scheduler_running(self) -> bool:
+        return self.server.scheduler_running
 
     def flush(self) -> None:
         self.server.flush()

@@ -201,22 +201,71 @@ def input_shardings(cfg, mesh: Mesh, shape, in_specs: Any) -> Any:
     return jax.tree.map(rule, in_specs)
 
 
+def _cache_head_sizes(cfg) -> set:
+    """Every head count a decode-cache dim of this config might carry:
+    attention heads (q and kv) plus, for the SSM/recurrent families, the
+    SSM head count (xLSTM's mLSTM head count IS ``n_heads``)."""
+    heads = set()
+    for attr in ("n_heads", "n_kv_heads"):
+        v = getattr(cfg, attr, None)
+        if v:
+            heads.add(int(v))
+    if getattr(cfg, "family", "") in ("ssm_xlstm", "hybrid"):
+        from ..models.ssm import ssm_dims  # deferred: models import dist
+
+        heads.add(ssm_dims(cfg)[1])
+    return heads
+
+
 def cache_shardings(cfg, mesh: Mesh, shape, c_specs: Any) -> Any:
-    """Decode caches shard their batch dim over the batch axes and, for
-    KV-shaped leaves [L, B, S, H, hd], the head dim over model."""
+    """Decode caches shard their batch dim over the batch axes and their
+    HEAD dim over model — for every cache family, not just attention KV:
+
+      KV          [L, B, S, H, hd]       head at dim 3
+      SSM conv    [L, B, K-1, d_conv]    batch only (channel mix, no heads)
+      SSM state   [L, B, H, N, P]        head at dim 2
+      hybrid SSM  [G, E, B, H, N, P]     batch at dim 2, head at dim 3
+      mLSTM C/n/m [P, B, H, hd, hd] / [P, B, H, hd] / [P, B, H]
+                                         head at dim 2
+      sLSTM       [P, B, D]              batch only (fused per-channel)
+
+    The head dim is recognized by its SIZE (one of the config's head
+    counts, see ``_cache_head_sizes``): the first such dim after the
+    batch dim takes "model", except the KV convention [stack, B, S, H,
+    hd] which pins dim 3 so a window length colliding with a head count
+    cannot steal the assignment.  Dims that don't divide the axis stay
+    replicated, as everywhere in this module."""
     sizes = _axis_sizes(mesh)
     n_model = sizes.get("model", 1)
     bx = batch_axes(mesh, shape.global_batch)
+    heads = _cache_head_sizes(cfg)
 
     def rule(leaf):
         spec = [None] * leaf.ndim
-        # caches are [stack, B, ...] (dim 1); prefill-less caches [B, ...]
-        if leaf.ndim >= 2 and leaf.shape[1] == shape.global_batch:
-            spec[1] = bx
-        elif leaf.ndim >= 1 and leaf.shape[0] == shape.global_batch:
-            spec[0] = bx
-        if "model" in sizes and leaf.ndim == 5 and leaf.shape[3] % n_model == 0:
-            spec[3] = "model"
+        # caches are [stack, B, ...] (dim 1), prefill-less [B, ...], or
+        # double-stacked hybrid groups [G, E, B, ...] (dim 2)
+        b_dim = next(
+            (
+                d
+                for d in (1, 0, 2)
+                if d < leaf.ndim and leaf.shape[d] == shape.global_batch
+            ),
+            None,
+        )
+        if b_dim is not None:
+            spec[b_dim] = bx
+        if "model" in sizes:
+            def head_at(d):
+                return leaf.shape[d] in heads and leaf.shape[d] % n_model == 0
+
+            if leaf.ndim == 5 and b_dim == 1 and head_at(3):
+                spec[3] = "model"  # the KV [L, B, S, H, hd] convention
+            else:
+                for d in range((b_dim if b_dim is not None else -1) + 1,
+                               leaf.ndim):
+                    if spec[d] is None and head_at(d):
+                        spec[d] = "model"
+                        break
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree.map(rule, c_specs)

@@ -122,12 +122,20 @@ class RecalController:
         self, x: np.ndarray, y: Optional[np.ndarray] = None
     ) -> np.ndarray:
         """Serve ``x`` through the real batched path, feed the monitor
-        (margins from the class sums the flush demuxed into the request
-        handle — no second engine pass), buffer labelled rows."""
+        (margins from the class sums the batch demuxed into the request
+        handle — no second engine pass), buffer labelled rows.
+
+        With the server's continuous-batching scheduler loop running,
+        the request is completed BY THE LOOP — the tap blocks on the
+        handle instead of driving a sync flush, so recalibration
+        observes exactly the scheduler-served traffic."""
         x = np.asarray(x, np.uint8)
         handle = self.server.submit(self.slot, x)
-        self.server.flush()
-        preds = handle.result()
+        if getattr(self.server, "scheduler_running", False):
+            preds = handle.wait(timeout=60.0)
+        else:
+            self.server.flush()
+            preds = handle.result()
         self.monitor.observe(handle.class_sums, preds, y)
         if y is not None:
             self._buffer.append((x, np.asarray(y, np.int32)))

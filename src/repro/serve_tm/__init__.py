@@ -4,37 +4,58 @@ The engine/capacity layer lives in ``repro.accel`` (the public façade:
 ``Accelerator``, ``CapacityPlan``, ``TMProgram``, the ``Engine`` plugin
 registry); this package is the serving machinery on top of it:
 
-  batching.py    request queue, 32-datapoint-word coalescing, demux
+  batching.py    priority-lane request queues (critical/high/normal/low),
+                 EDF batch formation, deadline shedding, 32-datapoint-word
+                 coalescing, demux; awaitable RequestHandle
+  scheduler.py   the continuous-batching flush loop (one asyncio task per
+                 server) + admission control (structured Overloaded)
   registry.py    named model slots with hot-swap + bounded history
                  (Fig-8 recalibration; accepts TMProgram artifacts)
-  metrics.py     latency/throughput instrumentation
-  server.py      TMServer — multi-tenant submit/flush/infer
+  metrics.py     latency/throughput instrumentation incl. per-lane
+                 percentiles, sheds, rejects, SLO attainment
+  server.py      TMServer — multi-tenant submit/flush/infer plus the
+                 async front door (start/stop, async_submit)
   executors.py   DEPRECATED shim: the old ServeCapacity/executor names,
-                 re-exported from repro.accel
+                 re-exported from repro.accel (warns on import)
+
+The legacy executor names below are re-exported from ``repro.accel``
+directly (NOT via the shim) so importing this package stays silent;
+importing ``repro.serve_tm.executors`` itself raises the deprecation
+warning.
 """
 
-from .batching import Batcher, RequestHandle
-from .executors import (
-    BACKENDS,
-    InterpExecutor,
-    PlanExecutor,
-    PopcountExecutor,
-    ServeCapacity,
-    ShardedExecutor,
-    make_executor,
+from ..accel.capacity import CapacityPlan as ServeCapacity
+from ..accel.engine import ENGINES as BACKENDS
+from ..accel.engine import make_engine as make_executor
+from ..accel.engines import (
+    InterpEngine as InterpExecutor,
+    PlanEngine as PlanExecutor,
+    PopcountEngine as PopcountExecutor,
+    ShardedEngine as ShardedExecutor,
+)
+from .batching import (
+    Batcher,
+    DeadlineExceeded,
+    PRIORITIES,
+    RequestHandle,
 )
 from .metrics import ServeMetrics
 from .registry import ModelRegistry, SlotEntry
+from .scheduler import Overloaded, Scheduler
 from .server import TMServer
 
 __all__ = [
     "BACKENDS",
     "Batcher",
+    "DeadlineExceeded",
     "InterpExecutor",
     "ModelRegistry",
+    "Overloaded",
+    "PRIORITIES",
     "PlanExecutor",
     "PopcountExecutor",
     "RequestHandle",
+    "Scheduler",
     "ServeCapacity",
     "ServeMetrics",
     "ShardedExecutor",

@@ -1,4 +1,5 @@
-"""Request queue + dynamic batcher for the TM serving subsystem.
+"""Request queue + priority-lane dynamic batcher for the TM serving
+subsystem.
 
 Independent inference requests (each a {0,1}[b, F] block of datapoints for
 one model slot) are coalesced into engine batches of at most
@@ -7,35 +8,111 @@ natively consumes.  A partial trailing word is padded inside the engine
 (``pack_features``); here we only track the fill ratio.  Large requests
 transparently span multiple engine batches; predictions are demultiplexed
 back into each request's ``RequestHandle`` row by row.
+
+Requests carry a *priority* (one of ``PRIORITIES``: critical > high >
+normal > low) and an optional absolute *deadline*.  Each slot keeps one
+lane per priority; batch formation walks the lanes strictly in priority
+order and, within a lane, earliest-deadline-first (deadline-less requests
+are FIFO behind every deadlined one with an earlier stamp).  A request
+whose deadline has already passed is never placed into a batch — it is
+*shed*: moved to the ``expired`` terminal state and reported through
+``drain_shed`` so the scheduler can count it.
+
+``RequestHandle`` completion is observable three ways: the non-blocking
+``result()`` (raises while pending), the blocking ``wait(timeout=)``, and
+the awaitable ``async_result()`` — the scheduler loop completes handles
+from its own thread and signals waiters on whatever event loop they
+registered from.
 """
 
 from __future__ import annotations
 
+import asyncio
+import heapq
+import math
+import threading
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 WORD = 32  # datapoints per bit-packed word (paper batching)
 
+# service order: batch formation drains lanes left to right
+PRIORITIES = ("critical", "high", "normal", "low")
+PRIORITY_RANK = {p: i for i, p in enumerate(PRIORITIES)}
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request expired (deadline passed) before its rows were served.
+
+    Carries the request id, slot, priority and the deadline that was
+    missed, so callers can log/shed without string parsing."""
+
+    def __init__(self, rid: int, slot: str, priority: str, deadline: float):
+        self.rid = rid
+        self.slot = slot
+        self.priority = priority
+        self.deadline = deadline
+        super().__init__(
+            f"request {rid} (slot {slot!r}, {priority} lane) expired: "
+            f"deadline passed before its rows were served"
+        )
+
 
 class RequestHandle:
-    """Per-request future: filled row-by-row as engine batches complete."""
+    """Per-request future: filled row-by-row as engine batches complete.
 
-    def __init__(self, rid: int, slot: str, n_rows: int):
+    Terminal states: ``done`` (all rows served) or ``expired`` (the
+    scheduler shed it past its deadline).  ``driver`` records who owns
+    completion — ``"flush"`` (the caller-driven sync path) or
+    ``"scheduler"`` (a running continuous-batching loop) — so the
+    pending-result error can say what to actually do.
+    """
+
+    def __init__(
+        self,
+        rid: int,
+        slot: str,
+        n_rows: int,
+        priority: str = "normal",
+        deadline: Optional[float] = None,
+    ):
+        if priority not in PRIORITY_RANK:
+            raise ValueError(
+                f"unknown priority {priority!r}; expected one of {PRIORITIES}"
+            )
         self.rid = rid
         self.slot = slot
         self.n_rows = n_rows
+        self.priority = priority
+        self.deadline = deadline  # absolute time.perf_counter() stamp
+        self.driver = "flush"
         self.predictions = np.full(n_rows, -1, np.int32)
         self.class_sums: Optional[np.ndarray] = None  # int32[n_rows, M]
         self.enqueued_at = time.perf_counter()
+        self.dequeued_at: Optional[float] = None  # first rows entered a batch
         self.completed_at: Optional[float] = None
+        self.expired_at: Optional[float] = None
         self._filled = 0
+        self._lock = threading.Lock()
+        self._terminal_evt = threading.Event()
+        self._async_waiters: List[Tuple[asyncio.AbstractEventLoop,
+                                        asyncio.Event]] = []
 
     @property
     def done(self) -> bool:
         return self._filled >= self.n_rows
+
+    @property
+    def expired(self) -> bool:
+        return self.expired_at is not None
+
+    @property
+    def status(self) -> str:
+        if self.expired:
+            return "expired"
+        return "done" if self.done else "pending"
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -43,13 +120,78 @@ class RequestHandle:
             return None
         return self.completed_at - self.enqueued_at
 
+    @property
+    def queue_delay_s(self) -> Optional[float]:
+        """Enqueue -> first rows placed into an engine batch."""
+        if self.dequeued_at is None:
+            return None
+        return self.dequeued_at - self.enqueued_at
+
+    @property
+    def missed_deadline(self) -> bool:
+        """Completed, but after the deadline (served-late SLO miss)."""
+        return (
+            self.deadline is not None
+            and self.completed_at is not None
+            and self.completed_at > self.deadline
+        )
+
     def result(self) -> np.ndarray:
+        if self.expired:
+            raise DeadlineExceeded(
+                self.rid, self.slot, self.priority, self.deadline
+            )
         if not self.done:
+            if self.driver == "scheduler":
+                remedy = (
+                    "the scheduler loop owns it — await async_result() "
+                    "or block on wait()"
+                )
+            else:
+                remedy = "call TMServer.flush() to run the sync driver"
             raise RuntimeError(
-                f"request {self.rid} has {self.n_rows - self._filled} rows "
-                f"pending; call TMServer.flush() first"
+                f"request {self.rid} for slot {self.slot!r} has "
+                f"{self.n_rows - self._filled} rows pending; {remedy}"
             )
         return self.predictions
+
+    def wait(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until terminal (a running scheduler completes or sheds
+        the request from its own thread), then return ``result()``."""
+        if not self._terminal_evt.wait(timeout):
+            raise TimeoutError(
+                f"request {self.rid} (slot {self.slot!r}) still pending "
+                f"after {timeout}s"
+            )
+        return self.result()
+
+    async def async_result(
+        self, timeout: Optional[float] = None
+    ) -> np.ndarray:
+        """Await completion; raises ``DeadlineExceeded`` if shed."""
+        with self._lock:
+            if not self._terminal_evt.is_set():
+                loop = asyncio.get_running_loop()
+                evt = asyncio.Event()
+                self._async_waiters.append((loop, evt))
+            else:
+                evt = None
+        if evt is not None:
+            if timeout is None:
+                await evt.wait()
+            else:
+                await asyncio.wait_for(evt.wait(), timeout)
+        return self.result()
+
+    def _signal_terminal(self) -> None:
+        with self._lock:
+            self._terminal_evt.set()
+            waiters, self._async_waiters = self._async_waiters, []
+        for loop, evt in waiters:
+            try:
+                loop.call_soon_threadsafe(evt.set)
+            except RuntimeError:
+                pass  # waiter's loop already closed; nothing to notify
 
     def _fill(
         self, lo: int, preds: np.ndarray, sums: Optional[np.ndarray] = None
@@ -64,6 +206,11 @@ class RequestHandle:
         self._filled += preds.shape[0]
         if self.done:
             self.completed_at = time.perf_counter()
+            self._signal_terminal()
+
+    def _expire(self, now: float) -> None:
+        self.expired_at = now
+        self._signal_terminal()
 
 
 class _Pending:
@@ -86,9 +233,18 @@ class _Pending:
 # batch belong to rows [request_lo, ...) of the request.
 Span = Tuple[RequestHandle, int, int, int]
 
+# heap entry: (deadline-or-inf, arrival seq, pending) — EDF within a lane,
+# FIFO among deadline-less requests
+_LaneEntry = Tuple[float, int, _Pending]
+
 
 class Batcher:
-    """Per-slot FIFO queues + greedy coalescing into engine batches."""
+    """Per-slot priority lanes + greedy coalescing into engine batches.
+
+    Lanes are drained strictly in ``PRIORITIES`` order; within a lane the
+    earliest deadline wins (FIFO for deadline-less requests).  Expired
+    requests are shed at formation time, never batched.
+    """
 
     def __init__(self, batch_capacity: int):
         if batch_capacity % WORD != 0:
@@ -97,26 +253,77 @@ class Batcher:
                 f"{WORD} (bit-packed words)"
             )
         self.batch_capacity = batch_capacity
-        self._queues: Dict[str, Deque[_Pending]] = {}
+        # slot -> priority -> EDF heap of pending requests
+        self._lanes: Dict[str, Dict[str, List[_LaneEntry]]] = {}
+        self._seq = 0
+        self._shed: List[RequestHandle] = []
+
+    def _slot_lanes(self, slot: str) -> Dict[str, List[_LaneEntry]]:
+        return self._lanes.setdefault(
+            slot, {p: [] for p in PRIORITIES}
+        )
 
     def enqueue(self, handle: RequestHandle, x: np.ndarray) -> None:
-        self._queues.setdefault(handle.slot, deque()).append(
-            _Pending(handle, x)
+        key = math.inf if handle.deadline is None else handle.deadline
+        self._seq += 1
+        heapq.heappush(
+            self._slot_lanes(handle.slot)[handle.priority],
+            (key, self._seq, _Pending(handle, x)),
         )
 
     def pending_slots(self) -> List[str]:
-        return [s for s, q in self._queues.items() if q]
+        return [
+            s for s, lanes in self._lanes.items()
+            if any(lanes[p] for p in PRIORITIES)
+        ]
 
-    def pending_rows(self, slot: str) -> int:
-        return sum(p.remaining for p in self._queues.get(slot, ()))
+    def pending_rows(self, slot: str, priority: Optional[str] = None) -> int:
+        lanes = self._lanes.get(slot)
+        if not lanes:
+            return 0
+        sel = (priority,) if priority is not None else PRIORITIES
+        return sum(
+            e[2].remaining for p in sel for e in lanes.get(p, ())
+        )
+
+    def oldest_enqueued_at(self, slot: str) -> Optional[float]:
+        """Enqueue stamp of the oldest pending request (batching-window
+        age the scheduler's max_wait timer is measured against)."""
+        lanes = self._lanes.get(slot)
+        if not lanes:
+            return None
+        stamps = [
+            e[2].handle.enqueued_at
+            for p in PRIORITIES for e in lanes.get(p, ())
+        ]
+        return min(stamps) if stamps else None
+
+    def earliest_deadline(self, slot: str) -> Optional[float]:
+        lanes = self._lanes.get(slot)
+        if not lanes:
+            return None
+        best = math.inf
+        for p in PRIORITIES:
+            if lanes[p]:
+                best = min(best, lanes[p][0][0])
+        return None if best is math.inf else best
 
     def next_batch(
-        self, slot: str, out: Optional[np.ndarray] = None
+        self,
+        slot: str,
+        out: Optional[np.ndarray] = None,
+        now: Optional[float] = None,
     ) -> Tuple[np.ndarray, List[Span]]:
-        """Pop up to ``batch_capacity`` rows off the slot's queue.
+        """Pop up to ``batch_capacity`` rows off the slot's lanes.
 
-        Returns the coalesced feature block plus the spans needed to demux
-        predictions back per-request.  Raises on an empty queue.
+        Lanes are consumed in strict priority order; within a lane,
+        earliest deadline first.  Requests whose deadline has passed (vs
+        ``now``, injectable for tests) are shed — marked expired,
+        reported via ``drain_shed`` — and NEVER included.  Returns the
+        coalesced feature block plus the spans needed to demux
+        predictions back per-request; raises on an empty queue (a batch
+        where every queued request expired returns an empty block and no
+        spans).
 
         With ``out`` (an engine staging array of at least
         ``[batch_capacity, F]``), request rows are packed straight into it
@@ -124,10 +331,16 @@ class Batcher:
         is zeroed (the engines consume one fixed zero-padded operand
         shape), and the returned block is the view ``out[:rows, :F]``.
         """
-        q = self._queues.get(slot)
-        if not q:
+        lanes = self._lanes.get(slot)
+        if not lanes or not any(lanes[p] for p in PRIORITIES):
             raise ValueError(f"no pending requests for slot {slot!r}")
-        n_features = q[0].x.shape[1]
+        if now is None:
+            now = time.perf_counter()
+        n_features = 0
+        for p in PRIORITIES:
+            if lanes[p]:
+                n_features = lanes[p][0][2].x.shape[1]
+                break
         if out is not None:
             if (out.shape[0] < self.batch_capacity
                     or out.shape[1] < n_features):
@@ -139,22 +352,42 @@ class Batcher:
         parts: List[np.ndarray] = []
         spans: List[Span] = []
         rows = 0
-        while q and rows < self.batch_capacity:
-            p = q[0]
-            take = min(p.remaining, self.batch_capacity - rows)
-            block = p.x[p.offset : p.offset + take]
-            if out is None:
-                parts.append(block)
-            else:
-                out[rows : rows + take, :n_features] = block
-            spans.append((p.handle, rows, rows + take, p.offset))
-            rows += take
-            p.offset += take
-            if p.remaining == 0:
-                q.popleft()
+        for priority in PRIORITIES:
+            lane = lanes[priority]
+            while lane and rows < self.batch_capacity:
+                key, seq, p = lane[0]
+                if key <= now:  # deadline already passed: shed, never batch
+                    heapq.heappop(lane)
+                    p.handle._expire(now)
+                    self._shed.append(p.handle)
+                    continue
+                take = min(p.remaining, self.batch_capacity - rows)
+                block = p.x[p.offset : p.offset + take]
+                if out is None:
+                    parts.append(block)
+                else:
+                    out[rows : rows + take, :n_features] = block
+                if p.handle.dequeued_at is None:
+                    p.handle.dequeued_at = now
+                spans.append((p.handle, rows, rows + take, p.offset))
+                rows += take
+                p.offset += take
+                if p.remaining == 0:
+                    heapq.heappop(lane)
+            if rows >= self.batch_capacity:
+                break
+        if not spans:  # everything queued had expired
+            empty = np.empty((0, n_features), np.uint8)
+            return (out[:0, :n_features] if out is not None else empty), []
         if out is not None:
             return out[:rows, :n_features], spans
         return np.concatenate(parts, axis=0), spans
+
+    def drain_shed(self) -> List[RequestHandle]:
+        """Handles shed (expired) since the last call — the scheduler
+        feeds these into the per-lane shed counters."""
+        shed, self._shed = self._shed, []
+        return shed
 
     @staticmethod
     def demux(

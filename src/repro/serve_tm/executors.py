@@ -16,13 +16,17 @@ callers keep working:
     BACKENDS           -> accel.engine.ENGINES (the live plugin registry)
     make_executor(...) -> accel.engine.make_engine(...)
 
-New code should import from ``repro.accel`` directly.  This module also
+New code should import from ``repro.accel`` directly — importing this
+module (or calling ``make_executor``) emits a ``DeprecationWarning``,
+once per process.  This module also
 no longer mutates process-global warning state: the donation-declined
 suppression is scoped to the donating engine's dispatch
 (``accel.engine._donation_declined_ok``).
 """
 
 from __future__ import annotations
+
+import warnings
 
 from ..accel.capacity import CapacityExceeded, CapacityPlan
 from ..accel.engine import ENGINES, EngineBase, make_engine
@@ -31,6 +35,16 @@ from ..accel.engines import (
     PlanEngine,
     PopcountEngine,
     ShardedEngine,
+)
+
+# fires once per process: the module body runs only on first import, and
+# repro.serve_tm itself no longer routes through this shim
+warnings.warn(
+    "repro.serve_tm.executors is deprecated: the executor layer moved to "
+    "repro.accel (ServeCapacity -> CapacityPlan, make_executor -> "
+    "make_engine, BACKENDS -> ENGINES, *Executor -> accel.engines.*Engine)",
+    DeprecationWarning,
+    stacklevel=2,
 )
 
 # legacy spellings
@@ -48,6 +62,11 @@ def make_executor(
 ) -> EngineBase:
     """Deprecated: use ``repro.accel.make_engine`` (uniform plugin
     construction; mesh forwarding is capability-flag-driven)."""
+    warnings.warn(
+        "make_executor is deprecated; use repro.accel.make_engine",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return make_engine(backend, capacity, mesh=mesh)
 
 

@@ -1,9 +1,28 @@
 """Latency/throughput instrumentation for the serving subsystem.
 
 Counters are recorded per engine batch (rows served, capacity fill,
-engine wall time), per completed request (queue-to-done latency) and per
-model swap.  ``summary()`` renders the JSON-friendly dict that
-``benchmarks/tm_serve.py`` emits into BENCH_tm_serve.json.
+engine wall time), per completed request (queue-to-done latency), per
+model swap, and — since the scheduler-owned continuous-batching runtime —
+per priority LANE: queue-delay and end-to-end latency percentiles,
+deadline misses (completed late), sheds (expired before service) and
+admission rejects, plus SLO attainment.  ``summary()`` renders the
+JSON-friendly dict that ``benchmarks/tm_serve.py`` emits into
+BENCH_tm_serve.json.
+
+``summary()`` schema (documented in docs/accel.md §Serving metrics):
+
+  batches, rows, requests_completed, swaps      int counters
+  fill_ratio                                    rows / padded engine rows
+  throughput_dps                                rows / engine seconds
+  engine_us / request_latency_us / swap_us      {p50, p95, p99}
+  recals, rollbacks, recal_*_s                  Fig-8 loop counters
+  sheds, admission_rejects, deadline_misses     totals across lanes
+  lanes.<lane>.completed|shed|rejected|deadline_miss    int counters
+  lanes.<lane>.queue_delay_us|latency_us        {p50, p99}
+  lanes.<lane>.slo_attainment                   completed-in-deadline /
+                                                (completed + shed); 1.0
+                                                when nothing carried a
+                                                deadline
 """
 
 from __future__ import annotations
@@ -11,6 +30,8 @@ from __future__ import annotations
 from typing import Dict, List
 
 import numpy as np
+
+from .batching import PRIORITIES
 
 
 def _pcts(xs: List[float]) -> Dict[str, float]:
@@ -20,6 +41,16 @@ def _pcts(xs: List[float]) -> Dict[str, float]:
     return {
         "p50": float(np.percentile(a, 50)),
         "p95": float(np.percentile(a, 95)),
+        "p99": float(np.percentile(a, 99)),
+    }
+
+
+def _pcts2(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p99": 0.0}
+    a = np.asarray(xs)
+    return {
+        "p50": float(np.percentile(a, 50)),
         "p99": float(np.percentile(a, 99)),
     }
 
@@ -38,6 +69,14 @@ class ServeMetrics:
         self.swap_s: List[float] = []
         self.recal_train_s: List[float] = []
         self.recal_compress_s: List[float] = []
+        # per-priority-lane accounting (the async front door)
+        self.lane_completed = {p: 0 for p in PRIORITIES}
+        self.lane_shed = {p: 0 for p in PRIORITIES}
+        self.lane_rejected = {p: 0 for p in PRIORITIES}
+        self.lane_deadline_miss = {p: 0 for p in PRIORITIES}
+        self.lane_in_slo = {p: 0 for p in PRIORITIES}
+        self.lane_queue_delay_s = {p: [] for p in PRIORITIES}
+        self.lane_latency_s = {p: [] for p in PRIORITIES}
 
     def record_batch(
         self, rows: int, capacity: int, elapsed_s: float, completed: int
@@ -51,6 +90,32 @@ class ServeMetrics:
     def record_request_latency(self, latency_s: float) -> None:
         self.request_latency_s.append(latency_s)
 
+    def record_lane_completion(
+        self,
+        lane: str,
+        queue_delay_s: float,
+        latency_s: float,
+        missed: bool = False,
+    ) -> None:
+        """One request finished in ``lane``; ``missed`` marks a request
+        that completed but AFTER its deadline (served-late SLO miss, as
+        opposed to a shed, which never got served at all)."""
+        self.lane_completed[lane] += 1
+        self.lane_queue_delay_s[lane].append(queue_delay_s)
+        self.lane_latency_s[lane].append(latency_s)
+        if missed:
+            self.lane_deadline_miss[lane] += 1
+        else:
+            self.lane_in_slo[lane] += 1
+
+    def record_shed(self, lane: str) -> None:
+        """A queued request expired (deadline passed) before service."""
+        self.lane_shed[lane] += 1
+
+    def record_admission_reject(self, lane: str) -> None:
+        """Admission control refused a submit (lane queue depth full)."""
+        self.lane_rejected[lane] += 1
+
     def record_swap(self, elapsed_s: float) -> None:
         self.swaps += 1
         self.swap_s.append(elapsed_s)
@@ -63,6 +128,30 @@ class ServeMetrics:
 
     def record_rollback(self) -> None:
         self.rollbacks += 1
+
+    def _lane_summary(self, lane: str) -> Dict:
+        completed = self.lane_completed[lane]
+        shed = self.lane_shed[lane]
+        terminal = completed + shed
+        return {
+            "completed": completed,
+            "shed": shed,
+            "rejected": self.lane_rejected[lane],
+            "deadline_miss": self.lane_deadline_miss[lane],
+            "queue_delay_us": {
+                k: v * 1e6
+                for k, v in _pcts2(self.lane_queue_delay_s[lane]).items()
+            },
+            "latency_us": {
+                k: v * 1e6
+                for k, v in _pcts2(self.lane_latency_s[lane]).items()
+            },
+            # served within deadline (no deadline counts as attained)
+            # over everything that reached a terminal state
+            "slo_attainment": (
+                self.lane_in_slo[lane] / terminal if terminal else 1.0
+            ),
+        }
 
     def summary(self) -> Dict:
         engine_total = sum(self.engine_s)
@@ -92,4 +181,8 @@ class ServeMetrics:
             "recal_compress_s": {
                 k: float(v) for k, v in _pcts(self.recal_compress_s).items()
             },
+            "sheds": sum(self.lane_shed.values()),
+            "admission_rejects": sum(self.lane_rejected.values()),
+            "deadline_misses": sum(self.lane_deadline_miss.values()),
+            "lanes": {p: self._lane_summary(p) for p in PRIORITIES},
         }

@@ -8,6 +8,13 @@ paper's Fig-4/Fig-8 engine).
     server.flush()                           # batch + run + demux
     preds = h.result()
 
+    # or scheduler-owned continuous batching (the async front door):
+    server.start()                           # flush loop runs itself
+    h = await server.async_submit("gas", x, priority="critical",
+                                  timeout_ms=50)
+    preds = await h.async_result()
+    server.stop()
+
 New deployments should prefer the ``repro.accel.Accelerator`` façade,
 which negotiates capacity from the model population and adds the
 portable ``TMProgram`` artifact path; ``TMServer`` remains the serving
@@ -21,23 +28,34 @@ engine — the multi-tenant generalization of the paper's one-engine-many-
 models claim.  ``register`` on a live slot is the hot-swap/recalibration
 path: queued traffic for that slot is drained under the OLD program first,
 then the new model is installed; the engine is never recompiled, and
-``flush`` asserts ``compile_cache_size() == 1`` after every drain.
+every scheduler-formed batch asserts ``compile_cache_size() == 1``.
 ``register`` also accepts a ``TMProgram`` artifact or its serialized
 bytes (reprogram-over-the-wire).
+
+Control flow: batch formation and execution are OWNED by the
+``Scheduler`` (serve_tm/scheduler.py).  Without ``start()`` nothing
+changes for callers — ``flush()`` drives the scheduler's batch body
+synchronously, exactly the old semantics.  With ``start()`` a
+continuous-batching asyncio loop forms batches itself (priority lanes,
+EDF, deadline shedding, admission control); the sync API keeps working
+and serializes against the loop through the scheduler's lock, and
+hot-swap/rollback hold that lock across drain + install so in-flight
+traffic always completes under the program it was submitted against.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Optional
+from typing import Dict, Optional
 
 import numpy as np
 
 from ..accel.capacity import CapacityPlan
 from ..accel.engine import EngineBase, make_engine, select_engine
-from .batching import Batcher, RequestHandle
+from .batching import RequestHandle
 from .metrics import ServeMetrics
 from .registry import DEFAULT_HISTORY_DEPTH, Installable, ModelRegistry, SlotEntry
+from .scheduler import Scheduler
 
 
 class TMServer:
@@ -50,7 +68,11 @@ class TMServer:
         engine: "Optional[str | EngineBase]" = None,
         engine_options: Optional[dict] = None,
         history_depth: int = DEFAULT_HISTORY_DEPTH,
+        max_wait_ms: float = 2.0,
+        lane_depth_rows: Optional[Dict[str, int]] = None,
     ):
+        from .batching import Batcher  # deferred: keep import cycle simple
+
         self.capacity = capacity if capacity is not None else CapacityPlan()
         chosen = engine if engine is not None else backend
         if chosen is None:
@@ -63,7 +85,26 @@ class TMServer:
         )
         self.batcher = Batcher(self.capacity.batch_capacity)
         self.metrics = ServeMetrics()
+        self.scheduler = Scheduler(
+            self, max_wait_ms=max_wait_ms, lane_depth_rows=lane_depth_rows
+        )
         self._next_rid = 0
+
+    # -- the continuous-batching lifecycle -----------------------------------
+
+    def start(self) -> None:
+        """Start the scheduler's continuous-batching loop (idempotent).
+        Submitted requests are served without anyone calling flush()."""
+        self.scheduler.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the loop; queued traffic is drained synchronously first
+        (``drain=False`` strands it for a later flush())."""
+        self.scheduler.stop(drain=drain)
+
+    @property
+    def scheduler_running(self) -> bool:
+        return self.scheduler.running
 
     # -- programming (the Fig-8 reprogram/recalibration path) ---------------
 
@@ -79,16 +120,19 @@ class TMServer:
         or artifact bytes fresh off the wire.  Traffic already queued for
         the slot is drained under the OLD program first (in-flight
         requests keep the model they were submitted against), then the
-        swap is pure data movement.  ``provenance`` records who produced
-        the model (e.g. the recal pipeline tags its swaps
+        swap is pure data movement.  The scheduler lock is held across
+        drain + install, so a running loop can never interleave a
+        new-program batch into the drain.  ``provenance`` records who
+        produced the model (e.g. the recal pipeline tags its swaps
         ``recal:<reason>``).
         """
-        if slot in self.registry and self.batcher.pending_rows(slot):
-            self._flush_slot(slot)
-        t0 = time.perf_counter()
-        entry = self.registry.install(slot, model, provenance=provenance)
-        self.metrics.record_swap(time.perf_counter() - t0)
-        return entry
+        with self.scheduler.lock:
+            if slot in self.registry and self.batcher.pending_rows(slot):
+                self.scheduler.drain_slot(slot)
+            t0 = time.perf_counter()
+            entry = self.registry.install(slot, model, provenance=provenance)
+            self.metrics.record_swap(time.perf_counter() - t0)
+            return entry
 
     def rollback(self, slot: str) -> SlotEntry:
         """Reinstall ``slot``'s previous model (recal safety net).
@@ -97,18 +141,24 @@ class TMServer:
         under the CURRENT program, then the previous entry's programmed
         buffers are swapped back in verbatim.
         """
-        if self.batcher.pending_rows(slot):
-            self._flush_slot(slot)
-        t0 = time.perf_counter()
-        entry = self.registry.rollback(slot)
-        self.metrics.record_swap(time.perf_counter() - t0)
-        self.metrics.record_rollback()
-        return entry
+        with self.scheduler.lock:
+            if self.batcher.pending_rows(slot):
+                self.scheduler.drain_slot(slot)
+            t0 = time.perf_counter()
+            entry = self.registry.rollback(slot)
+            self.metrics.record_swap(time.perf_counter() - t0)
+            self.metrics.record_rollback()
+            return entry
 
     # -- traffic -------------------------------------------------------------
 
-    def submit(self, slot: str, x: np.ndarray) -> RequestHandle:
-        """Queue {0,1}[b, F] (or [F]) datapoints against ``slot``."""
+    def _make_handle(
+        self,
+        slot: str,
+        x: np.ndarray,
+        priority: str,
+        timeout_ms: Optional[float],
+    ) -> "tuple[RequestHandle, np.ndarray]":
         entry = self.registry.get(slot)
         x = np.asarray(x, dtype=np.uint8)
         if x.ndim == 1:
@@ -122,20 +172,70 @@ class TMServer:
             )
         if x.max(initial=0) > 1:
             raise ValueError("features must be Boolean {0,1}")
-        handle = RequestHandle(self._next_rid, slot, x.shape[0])
+        deadline = None
+        if timeout_ms is not None:
+            deadline = time.perf_counter() + timeout_ms / 1e3
+        handle = RequestHandle(
+            self._next_rid, slot, x.shape[0],
+            priority=priority, deadline=deadline,
+        )
         self._next_rid += 1
+        return handle, x
+
+    def submit(
+        self,
+        slot: str,
+        x: np.ndarray,
+        *,
+        priority: str = "normal",
+        timeout_ms: Optional[float] = None,
+    ) -> RequestHandle:
+        """Queue {0,1}[b, F] (or [F]) datapoints against ``slot``.
+
+        With a running scheduler the request is served by the loop (no
+        flush() needed — block on ``handle.wait()`` or await
+        ``handle.async_result()``); otherwise it waits for the next
+        flush().  ``priority`` picks the lane, ``timeout_ms`` stamps a
+        deadline after which the request is shed instead of served."""
+        handle, x = self._make_handle(slot, x, priority, timeout_ms)
+        handle.driver = (
+            "scheduler" if self.scheduler.running else "flush"
+        )
         self.batcher.enqueue(handle, x)
+        if self.scheduler.running:
+            self.scheduler.wake()
         return handle
 
+    async def async_submit(
+        self,
+        slot: str,
+        x: np.ndarray,
+        *,
+        priority: str = "normal",
+        timeout_ms: Optional[float] = None,
+    ) -> RequestHandle:
+        """Admission-controlled submit for async callers.
+
+        Raises the structured ``Overloaded`` when the (slot, lane) queue
+        depth budget is exhausted — under sustained overload the low
+        lanes reject first.  Await the returned handle's
+        ``async_result()`` for completion."""
+        self.registry.get(slot)  # raise KeyError before admission math
+        xa = np.asarray(x)
+        rows = xa.shape[0] if xa.ndim == 2 else 1
+        self.scheduler.admit(slot, priority, rows)
+        return self.submit(slot, x, priority=priority, timeout_ms=timeout_ms)
+
     def flush(self) -> None:
-        """Drain every slot's queue through the engine."""
-        for slot in self.batcher.pending_slots():
-            self._flush_slot(slot)
+        """Drain every slot's queue through the engine (the sync driver;
+        a running scheduler loop makes this a no-op-ish safety valve —
+        both drive the same scheduler batch body under one lock)."""
+        self.scheduler.drain_all()
 
     def infer(self, slot: str, x: np.ndarray) -> np.ndarray:
-        """Synchronous convenience: submit + flush -> int32[b] predictions."""
+        """Synchronous convenience: submit + drain -> int32[b] predictions."""
         handle = self.submit(slot, x)
-        self._flush_slot(slot)
+        self.scheduler.drain_slot(slot)
         return handle.result()
 
     def class_sums(self, slot: str, x: np.ndarray) -> np.ndarray:
@@ -145,27 +245,6 @@ class TMServer:
         return self.executor.class_sums(entry.program, np.asarray(x, np.uint8))
 
     # -- internals -----------------------------------------------------------
-
-    def _flush_slot(self, slot: str) -> None:
-        entry = self.registry.get(slot)
-        while self.batcher.pending_rows(slot):
-            # pack rows straight into the engine's staging array: the
-            # flush path performs no per-batch feature allocation
-            X, spans = self.batcher.next_batch(
-                slot, out=self.executor.staging
-            )
-            t0 = time.perf_counter()
-            sums = self.executor.class_sums(entry.program, X)
-            dt = time.perf_counter() - t0
-            preds = np.argmax(sums, axis=1).astype(np.int32)
-            completed = Batcher.demux(spans, preds, sums)
-            self.metrics.record_batch(
-                X.shape[0], self.capacity.batch_capacity, dt, completed
-            )
-            for handle, _, _, _ in spans:
-                if handle.done and handle.latency_s is not None:
-                    self.metrics.record_request_latency(handle.latency_s)
-        self._check_no_recompile()
 
     def compile_cache_size(self) -> int:
         """# compiled variants of this server's engine (must stay 1)."""

@@ -2,6 +2,12 @@
 oracle, hot swap under traffic with zero recompilation, batching/demux,
 capacity guards and metrics."""
 
+import asyncio
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
@@ -9,9 +15,19 @@ import jax.numpy as jnp
 
 from repro.core import TMConfig, batch_class_sums, state_from_actions
 from repro.core.compress import encode
-from repro.serve_tm import Batcher, RequestHandle, ServeCapacity, TMServer
+from repro.serve_tm import (
+    Batcher,
+    DeadlineExceeded,
+    Overloaded,
+    PRIORITIES,
+    RequestHandle,
+    ServeCapacity,
+    TMServer,
+)
 
 BACKENDS = ("interp", "plan", "sharded", "popcount")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CAP = ServeCapacity(
     instruction_capacity=1024, feature_capacity=128, class_capacity=16,
@@ -242,3 +258,284 @@ def test_batcher_coalesces_and_splits():
         b.next_batch("s")
     with pytest.raises(ValueError, match="multiple"):
         Batcher(33)
+
+
+# ---------------------------------------------------------------------------
+# the scheduler-owned continuous-batching runtime (priority lanes, EDF,
+# deadlines, admission control, the async front door)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scheduler_async_path_bit_exact(backend):
+    """All four engines stay bit-exact when traffic rides the async front
+    door (async_submit -> loop-formed batches -> async_result), with the
+    no-recompile invariant held per scheduler-formed batch."""
+    rng = np.random.default_rng(7)
+    cfg, acts, model = _random_model(rng, 5, 12, 40)
+    server = TMServer(CAP, backend=backend, max_wait_ms=0.5)
+    server.register("m", model)
+    server.start()
+    try:
+        async def drive():
+            handles, blocks = [], []
+            for i, pr in enumerate(PRIORITIES * 2):
+                x = rng.integers(0, 2, (3 + i, 40)).astype(np.uint8)
+                h = await server.async_submit("m", x, priority=pr)
+                handles.append(h)
+                blocks.append(x)
+            return [
+                (await h.async_result(timeout=30.0), x)
+                for h, x in zip(handles, blocks)
+            ]
+
+        for preds, x in asyncio.run(drive()):
+            assert (preds == _oracle_sums(cfg, acts, x).argmax(1)).all()
+        assert server.compile_cache_size() == 1
+        lanes = server.metrics.summary()["lanes"]
+        assert all(lanes[p]["completed"] == 2 for p in PRIORITIES)
+        assert all(lanes[p]["shed"] == 0 for p in PRIORITIES)
+    finally:
+        server.stop()
+
+
+@pytest.mark.parametrize("backend", ("plan", "popcount"))
+def test_live_scheduler_hot_swap_and_rollback_drain(backend):
+    """Hot-swap (register) and rollback land while the scheduler loop is
+    live with a queued backlog: the backlog completes under the OLD
+    program (the lock is held across drain + install), and the engine
+    never recompiles across either transition."""
+    rng = np.random.default_rng(8)
+    cfg_a, acts_a, model_a = _random_model(rng, 5, 12, 40)
+    cfg_b, acts_b, model_b = _random_model(rng, 3, 8, 24)
+    server = TMServer(CAP, backend=backend, max_wait_ms=0.2)
+    server.register("slot", model_a)
+    server.start()
+    try:
+        # stall the loop on the scheduler lock so a multi-batch backlog
+        # builds, then swap: register must drain it under model A first
+        with server.scheduler.lock:
+            xs = [
+                rng.integers(0, 2, (CAP.batch_capacity + 3, 40)).astype(
+                    np.uint8
+                )
+                for _ in range(2)
+            ]
+            handles = [server.submit("slot", x) for x in xs]
+            server.register("slot", model_b)
+        for h, x in zip(handles, xs):
+            assert (
+                h.wait(timeout=30.0)
+                == _oracle_sums(cfg_a, acts_a, x).argmax(1)
+            ).all()
+        # same discipline for rollback: queued model-B traffic finishes
+        # under B, then A's buffers come back
+        with server.scheduler.lock:
+            xb = rng.integers(0, 2, (CAP.batch_capacity + 1, 24)).astype(
+                np.uint8
+            )
+            hb = server.submit("slot", xb)
+            server.rollback("slot")
+        assert (
+            hb.wait(timeout=30.0) == _oracle_sums(cfg_b, acts_b, xb).argmax(1)
+        ).all()
+        # post-rollback the loop serves under model A again, no flush()
+        xa = rng.integers(0, 2, (9, 40)).astype(np.uint8)
+        ha = server.submit("slot", xa)
+        assert (
+            ha.wait(timeout=30.0) == _oracle_sums(cfg_a, acts_a, xa).argmax(1)
+        ).all()
+        assert server.compile_cache_size() == 1
+    finally:
+        server.stop()
+
+
+def test_batch_formation_property_priority_and_expiry():
+    """Property: scheduler batch formation never violates strict priority
+    order within a batch and never includes an expired request; every
+    past-deadline request ends shed, everything else completes."""
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.serve_tm.batching import PRIORITY_RANK
+
+    reqs = st.lists(
+        st.tuples(
+            st.integers(0, 3),                      # priority index
+            st.integers(1, 12),                     # rows
+            st.sampled_from(("past", "soon", "none")),
+        ),
+        min_size=1,
+        max_size=24,
+    )
+
+    @given(reqs)
+    @settings(max_examples=60, deadline=None)
+    def check(spec):
+        now = 1_000.0  # synthetic clock injected into next_batch
+        b = Batcher(64)
+        handles = []
+        for i, (pi, rows, dl) in enumerate(spec):
+            deadline = {"past": now - 1.0, "soon": now + 60.0, "none": None}[dl]
+            h = RequestHandle(
+                i, "s", rows, priority=PRIORITIES[pi], deadline=deadline
+            )
+            b.enqueue(h, np.zeros((rows, 8), np.uint8))
+            handles.append((h, dl))
+        while b.pending_rows("s"):
+            X, spans = b.next_batch("s", now=now)
+            ranks = [PRIORITY_RANK[h.priority] for h, _, _, _ in spans]
+            assert ranks == sorted(ranks)
+            for h, lo, hi, _ in spans:
+                assert not h.expired
+                assert h.deadline is None or h.deadline > now
+            assert X.shape[0] == sum(hi - lo for _, lo, hi, _ in spans)
+        for h, dl in handles:
+            assert h.status == ("expired" if dl == "past" else "done")
+
+    check()
+
+
+def test_async_submit_admission_control_overload():
+    """Admission control: the low lane rejects once its queue-depth
+    budget fills, with the structured Overloaded fields; critical keeps
+    admitting under the exact same backlog."""
+    rng = np.random.default_rng(9)
+    cfg, acts, model = _random_model(rng, 4, 8, 32)
+    server = TMServer(
+        CAP,
+        backend="plan",
+        lane_depth_rows={"low": CAP.batch_capacity},
+    )
+    server.register("m", model)
+    x_full = rng.integers(0, 2, (CAP.batch_capacity, 32)).astype(np.uint8)
+    x_one = rng.integers(0, 2, (1, 32)).astype(np.uint8)
+
+    async def drive():
+        await server.async_submit("m", x_full, priority="low")
+        with pytest.raises(Overloaded) as ei:
+            await server.async_submit("m", x_one, priority="low")
+        err = ei.value
+        assert (err.slot, err.priority) == ("m", "low")
+        assert err.pending_rows == CAP.batch_capacity
+        assert err.limit_rows == CAP.batch_capacity
+        # critical still has headroom under the same backlog
+        return await server.async_submit("m", x_one, priority="critical")
+
+    h = asyncio.run(drive())
+    server.flush()
+    assert (h.result() == _oracle_sums(cfg, acts, x_one).argmax(1)).all()
+    s = server.metrics.summary()
+    assert s["admission_rejects"] == 1
+    assert s["lanes"]["low"]["rejected"] == 1
+    assert s["lanes"]["critical"]["rejected"] == 0
+    with pytest.raises(KeyError):
+        asyncio.run(server.async_submit("nope", x_one))
+
+
+def test_deadline_shed_and_expired_terminal_state():
+    """A request whose deadline passes before service is shed, lands in
+    the expired terminal state, and raises DeadlineExceeded from both
+    result() and wait(); the lane accounting separates it from the
+    in-SLO completion sharing its lane."""
+    rng = np.random.default_rng(10)
+    cfg, acts, model = _random_model(rng, 4, 8, 32)
+    server = TMServer(CAP, backend="plan")
+    server.register("m", model)
+    x = rng.integers(0, 2, (6, 32)).astype(np.uint8)
+    h_ok = server.submit("m", x)
+    h_dead = server.submit("m", x, timeout_ms=0.0)
+    server.flush()
+    assert (h_ok.result() == _oracle_sums(cfg, acts, x).argmax(1)).all()
+    assert h_dead.status == "expired" and h_dead.expired
+    with pytest.raises(DeadlineExceeded) as ei:
+        h_dead.result()
+    assert (ei.value.rid, ei.value.slot) == (h_dead.rid, "m")
+    assert ei.value.priority == "normal"
+    with pytest.raises(DeadlineExceeded):
+        h_dead.wait(timeout=5.0)
+    s = server.metrics.summary()
+    assert s["sheds"] == 1
+    assert s["lanes"]["normal"]["shed"] == 1
+    assert s["lanes"]["normal"]["completed"] == 1
+    assert s["lanes"]["normal"]["slo_attainment"] == 0.5
+
+
+def test_pending_result_error_names_driver_and_slot():
+    """Satellite regression: the pending-result error names whichever
+    driver owns the request (sync flush vs scheduler loop) and the slot."""
+    rng = np.random.default_rng(11)
+    _, _, model = _random_model(rng, 4, 8, 32)
+    server = TMServer(CAP, backend="plan")
+    server.register("m", model)
+    h = server.submit("m", rng.integers(0, 2, (4, 32)).astype(np.uint8))
+    with pytest.raises(RuntimeError, match=r"slot 'm'.*TMServer\.flush\(\)"):
+        h.result()
+    server.flush()
+    h2 = RequestHandle(99, "edge", 4)
+    h2.driver = "scheduler"
+    with pytest.raises(RuntimeError, match=r"slot 'edge'.*async_result\(\)"):
+        h2.result()
+
+
+def test_scheduler_lifecycle_idempotent_and_stop_drains():
+    rng = np.random.default_rng(12)
+    cfg, acts, model = _random_model(rng, 4, 8, 32)
+    server = TMServer(CAP, backend="plan", max_wait_ms=0.2)
+    server.register("m", model)
+    server.start()
+    server.start()  # idempotent
+    assert server.scheduler_running
+    with server.scheduler.lock:  # enqueue while the loop can't serve
+        x = rng.integers(0, 2, (5, 32)).astype(np.uint8)
+        h = server.submit("m", x)
+    server.stop()  # drain=True: nothing admitted is stranded
+    assert not server.scheduler_running
+    assert (h.result() == _oracle_sums(cfg, acts, x).argmax(1)).all()
+    # sync submit after stop reverts to the flush driver
+    h2 = server.submit("m", x)
+    assert h2.driver == "flush"
+    server.flush()
+    assert h2.done
+
+
+def test_executors_shim_deprecation_fires_once():
+    """Satellite 1: importing the legacy executors shim (or calling
+    make_executor) emits a real DeprecationWarning exactly once per
+    process, while importing repro.serve_tm itself stays silent."""
+    code = textwrap.dedent(
+        """
+        import warnings
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            import repro.serve_tm                 # package import: silent
+            import repro.serve_tm.executors       # shim: warns
+            import repro.serve_tm.executors       # cached: no second warning
+        dep = [
+            w for w in rec if issubclass(w.category, DeprecationWarning)
+        ]
+        assert len(dep) == 1, [str(w.message) for w in rec]
+        assert "repro.accel" in str(dep[0].message)
+
+        from repro.serve_tm.executors import ServeCapacity, make_executor
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            make_executor("interp", ServeCapacity())
+        dep = [
+            w for w in rec if issubclass(w.category, DeprecationWarning)
+        ]
+        assert len(dep) == 1, [str(w.message) for w in rec]
+        assert "make_engine" in str(dep[0].message)
+        print("SHIM-OK")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env
+    )
+    assert out.returncode == 0, out.stderr
+    assert "SHIM-OK" in out.stdout

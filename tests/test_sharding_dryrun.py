@@ -112,3 +112,67 @@ def test_param_sharding_rules():
         # every leaf has a sharding; big matrices are model-sharded
         flat = jax.tree_util.tree_flatten_with_path(sh)[0]
         assert len(flat) == len(jax.tree.leaves(specs))
+
+
+def test_cache_sharding_rules_head_dims():
+    """Decode caches get batch+HEAD sharding for every cache family —
+    attention KV at dim 3, SSM state / mLSTM matrix-memory at their own
+    head dims — while headless leaves (SSM conv, sLSTM channel state)
+    stay batch-only.  Runs on a degenerate (1, 1) named mesh: axis-name
+    assignment is mesh-size-independent, so the PartitionSpecs prove the
+    rule without 8 host devices."""
+    import jax
+    from repro.configs.base import ShapeSpec
+    from repro.configs.registry import get
+    from repro.dist import sharding as shd
+    from repro.models.api import family_for
+    from repro.models.ssm import ssm_dims
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def specs_for(arch, batch=8):
+        cfg = get(arch)
+        shape = ShapeSpec("t", 64, batch, "decode")
+        c_specs = family_for(cfg).cache_specs(cfg, shape)
+        c_sh = shd.cache_shardings(cfg, mesh, shape, c_specs)
+        return cfg, shape, jax.tree.leaves(c_specs), jax.tree.leaves(c_sh)
+
+    def model_dims(sh):
+        return [
+            d for d, ax in enumerate(sh.spec) if ax == "model"
+        ]
+
+    # dense KV [L, B, S, Hkv, hd]: batch dim 1, head dim 3
+    cfg, shape, leaves, shardings = specs_for("starcoder2-7b")
+    for leaf, sh in zip(leaves, shardings):
+        assert sh.spec[1] is not None  # batch sharded
+        assert model_dims(sh) == [3]
+        assert leaf.shape[3] == cfg.n_kv_heads
+
+    # xLSTM: mLSTM C/n/m [P, B, H, ...] head dim 2; sLSTM [P, B, D]
+    # is per-channel fused state — batch-only
+    cfg, shape, leaves, shardings = specs_for("xlstm-125m")
+    for leaf, sh in zip(leaves, shardings):
+        assert sh.spec[1] is not None
+        if leaf.ndim >= 3 and leaf.shape[2] == cfg.n_heads:
+            assert model_dims(sh) == [2], leaf.shape
+        else:
+            assert model_dims(sh) == [], leaf.shape
+
+    # Zamba2 hybrid: SSM state [G, E, B, H, N, P] head dim 3, conv
+    # [G, E, B, K-1, d_conv] batch-only, shared KV [G, B, W, Hkv, hd]
+    cfg, shape, leaves, shardings = specs_for("zamba2-2.7b")
+    H_ssm = ssm_dims(cfg)[1]
+    saw_ssm_state = saw_kv = False
+    for leaf, sh in zip(leaves, shardings):
+        if leaf.ndim == 6:  # ssm state
+            assert sh.spec[2] is not None  # batch at dim 2
+            assert model_dims(sh) == [3] and leaf.shape[3] == H_ssm
+            saw_ssm_state = True
+        elif leaf.ndim == 5 and leaf.shape[3] == cfg.n_kv_heads:  # kv
+            assert sh.spec[1] is not None
+            assert model_dims(sh) == [3]
+            saw_kv = True
+        else:  # conv stack: no head dim
+            assert model_dims(sh) == [], leaf.shape
+    assert saw_ssm_state and saw_kv
