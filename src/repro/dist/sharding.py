@@ -233,8 +233,14 @@ def cache_shardings(cfg, mesh: Mesh, shape, c_specs: Any) -> Any:
     counts, see ``_cache_head_sizes``): the first such dim after the
     batch dim takes "model", except the KV convention [stack, B, S, H,
     hd] which pins dim 3 so a window length colliding with a head count
-    cannot steal the assignment.  Dims that don't divide the axis stay
-    replicated, as everywhere in this module."""
+    cannot steal the assignment.  The pin checks the shape signature,
+    not just rank: the mLSTM C cache [P, B, H, hd, hd] is also 5-D and
+    its per-head feature dim 3 coincides with a head count whenever
+    hd == H (e.g. d_model=64, n_heads=8) — a square trailing [hd, hd]
+    with a head count at dim 2 is recognized as that matrix-memory
+    signature and falls through to the generic first-head-after-batch
+    rule (dim 2), as the table above requires.  Dims that don't divide
+    the axis stay replicated, as everywhere in this module."""
     sizes = _axis_sizes(mesh)
     n_model = sizes.get("model", 1)
     bx = batch_axes(mesh, shape.global_batch)
@@ -258,7 +264,13 @@ def cache_shardings(cfg, mesh: Mesh, shape, c_specs: Any) -> Any:
             def head_at(d):
                 return leaf.shape[d] in heads and leaf.shape[d] % n_model == 0
 
-            if leaf.ndim == 5 and b_dim == 1 and head_at(3):
+            is_mlstm_c = (
+                leaf.ndim == 5
+                and leaf.shape[3] == leaf.shape[4]
+                and leaf.shape[2] in heads
+            )
+            if (leaf.ndim == 5 and b_dim == 1 and head_at(3)
+                    and not is_mlstm_c):
                 spec[3] = "model"  # the KV [L, B, S, H, hd] convention
             else:
                 for d in range((b_dim if b_dim is not None else -1) + 1,

@@ -244,6 +244,15 @@ class Batcher:
     Lanes are drained strictly in ``PRIORITIES`` order; within a lane the
     earliest deadline wins (FIFO for deadline-less requests).  Expired
     requests are shed at formation time, never batched.
+
+    ``lock`` serializes every heap read/mutation: submit-side enqueues
+    run on caller threads while the scheduler loop forms batches on its
+    own thread, and heapq's peek-then-pop is not atomic — without the
+    lock a concurrent push can re-order the heap root mid-formation and
+    the wrong request gets popped (silently dropped, its handle never
+    terminal).  The lock is re-entrant so the scheduler can compose
+    multi-step atomic sections (admission check + enqueue) on top of the
+    self-locking public methods.
     """
 
     def __init__(self, batch_capacity: int):
@@ -253,6 +262,7 @@ class Batcher:
                 f"{WORD} (bit-packed words)"
             )
         self.batch_capacity = batch_capacity
+        self.lock = threading.RLock()
         # slot -> priority -> EDF heap of pending requests
         self._lanes: Dict[str, Dict[str, List[_LaneEntry]]] = {}
         self._seq = 0
@@ -265,48 +275,53 @@ class Batcher:
 
     def enqueue(self, handle: RequestHandle, x: np.ndarray) -> None:
         key = math.inf if handle.deadline is None else handle.deadline
-        self._seq += 1
-        heapq.heappush(
-            self._slot_lanes(handle.slot)[handle.priority],
-            (key, self._seq, _Pending(handle, x)),
-        )
+        with self.lock:
+            self._seq += 1
+            heapq.heappush(
+                self._slot_lanes(handle.slot)[handle.priority],
+                (key, self._seq, _Pending(handle, x)),
+            )
 
     def pending_slots(self) -> List[str]:
-        return [
-            s for s, lanes in self._lanes.items()
-            if any(lanes[p] for p in PRIORITIES)
-        ]
+        with self.lock:
+            return [
+                s for s, lanes in self._lanes.items()
+                if any(lanes[p] for p in PRIORITIES)
+            ]
 
     def pending_rows(self, slot: str, priority: Optional[str] = None) -> int:
-        lanes = self._lanes.get(slot)
-        if not lanes:
-            return 0
-        sel = (priority,) if priority is not None else PRIORITIES
-        return sum(
-            e[2].remaining for p in sel for e in lanes.get(p, ())
-        )
+        with self.lock:
+            lanes = self._lanes.get(slot)
+            if not lanes:
+                return 0
+            sel = (priority,) if priority is not None else PRIORITIES
+            return sum(
+                e[2].remaining for p in sel for e in lanes.get(p, ())
+            )
 
     def oldest_enqueued_at(self, slot: str) -> Optional[float]:
         """Enqueue stamp of the oldest pending request (batching-window
         age the scheduler's max_wait timer is measured against)."""
-        lanes = self._lanes.get(slot)
-        if not lanes:
-            return None
-        stamps = [
-            e[2].handle.enqueued_at
-            for p in PRIORITIES for e in lanes.get(p, ())
-        ]
-        return min(stamps) if stamps else None
+        with self.lock:
+            lanes = self._lanes.get(slot)
+            if not lanes:
+                return None
+            stamps = [
+                e[2].handle.enqueued_at
+                for p in PRIORITIES for e in lanes.get(p, ())
+            ]
+            return min(stamps) if stamps else None
 
     def earliest_deadline(self, slot: str) -> Optional[float]:
-        lanes = self._lanes.get(slot)
-        if not lanes:
-            return None
-        best = math.inf
-        for p in PRIORITIES:
-            if lanes[p]:
-                best = min(best, lanes[p][0][0])
-        return None if best is math.inf else best
+        with self.lock:
+            lanes = self._lanes.get(slot)
+            if not lanes:
+                return None
+            best = math.inf
+            for p in PRIORITIES:
+                if lanes[p]:
+                    best = min(best, lanes[p][0][0])
+            return None if best is math.inf else best
 
     def next_batch(
         self,
@@ -331,62 +346,66 @@ class Batcher:
         is zeroed (the engines consume one fixed zero-padded operand
         shape), and the returned block is the view ``out[:rows, :F]``.
         """
-        lanes = self._lanes.get(slot)
-        if not lanes or not any(lanes[p] for p in PRIORITIES):
-            raise ValueError(f"no pending requests for slot {slot!r}")
-        if now is None:
-            now = time.perf_counter()
-        n_features = 0
-        for p in PRIORITIES:
-            if lanes[p]:
-                n_features = lanes[p][0][2].x.shape[1]
-                break
-        if out is not None:
-            if (out.shape[0] < self.batch_capacity
-                    or out.shape[1] < n_features):
-                raise ValueError(
-                    f"staging array {out.shape} too small for "
-                    f"{self.batch_capacity} rows x {n_features} features"
-                )
-            out.fill(0)
-        parts: List[np.ndarray] = []
-        spans: List[Span] = []
-        rows = 0
-        for priority in PRIORITIES:
-            lane = lanes[priority]
-            while lane and rows < self.batch_capacity:
-                key, seq, p = lane[0]
-                if key <= now:  # deadline already passed: shed, never batch
-                    heapq.heappop(lane)
-                    p.handle._expire(now)
-                    self._shed.append(p.handle)
-                    continue
-                take = min(p.remaining, self.batch_capacity - rows)
-                block = p.x[p.offset : p.offset + take]
-                if out is None:
-                    parts.append(block)
-                else:
-                    out[rows : rows + take, :n_features] = block
-                if p.handle.dequeued_at is None:
-                    p.handle.dequeued_at = now
-                spans.append((p.handle, rows, rows + take, p.offset))
-                rows += take
-                p.offset += take
-                if p.remaining == 0:
-                    heapq.heappop(lane)
-            if rows >= self.batch_capacity:
-                break
-        if not spans:  # everything queued had expired
-            empty = np.empty((0, n_features), np.uint8)
-            return (out[:0, :n_features] if out is not None else empty), []
-        if out is not None:
-            return out[:rows, :n_features], spans
-        return np.concatenate(parts, axis=0), spans
+        with self.lock:
+            lanes = self._lanes.get(slot)
+            if not lanes or not any(lanes[p] for p in PRIORITIES):
+                raise ValueError(f"no pending requests for slot {slot!r}")
+            if now is None:
+                now = time.perf_counter()
+            n_features = 0
+            for p in PRIORITIES:
+                if lanes[p]:
+                    n_features = lanes[p][0][2].x.shape[1]
+                    break
+            if out is not None:
+                if (out.shape[0] < self.batch_capacity
+                        or out.shape[1] < n_features):
+                    raise ValueError(
+                        f"staging array {out.shape} too small for "
+                        f"{self.batch_capacity} rows x {n_features} features"
+                    )
+                out.fill(0)
+            parts: List[np.ndarray] = []
+            spans: List[Span] = []
+            rows = 0
+            for priority in PRIORITIES:
+                lane = lanes[priority]
+                while lane and rows < self.batch_capacity:
+                    key, seq, p = lane[0]
+                    if key <= now:  # deadline passed: shed, never batch
+                        heapq.heappop(lane)
+                        p.handle._expire(now)
+                        self._shed.append(p.handle)
+                        continue
+                    take = min(p.remaining, self.batch_capacity - rows)
+                    block = p.x[p.offset : p.offset + take]
+                    if out is None:
+                        parts.append(block)
+                    else:
+                        out[rows : rows + take, :n_features] = block
+                    if p.handle.dequeued_at is None:
+                        p.handle.dequeued_at = now
+                    spans.append((p.handle, rows, rows + take, p.offset))
+                    rows += take
+                    p.offset += take
+                    if p.remaining == 0:
+                        heapq.heappop(lane)
+                if rows >= self.batch_capacity:
+                    break
+            if not spans:  # everything queued had expired
+                empty = np.empty((0, n_features), np.uint8)
+                return (
+                    out[:0, :n_features] if out is not None else empty
+                ), []
+            if out is not None:
+                return out[:rows, :n_features], spans
+            return np.concatenate(parts, axis=0), spans
 
     def drain_shed(self) -> List[RequestHandle]:
         """Handles shed (expired) since the last call — the scheduler
         feeds these into the per-lane shed counters."""
-        shed, self._shed = self._shed, []
+        with self.lock:
+            shed, self._shed = self._shed, []
         return shed
 
     @staticmethod

@@ -18,16 +18,23 @@ low-lane budget), so under sustained overload low-priority traffic is
 rejected first while critical keeps being admitted — the edge-SLO shape
 of MATADOR-style real-time deployments.
 
-Thread discipline: a single re-entrant lock serializes every touch of
-the batcher + engine between the loop thread and synchronous callers
-(flush, hot-swap drains, rollback).  Hot-swap holds the lock across
-drain + install, so the drain-under-the-old-program guarantee holds with
-the loop running.
+Thread discipline: two locks at two granularities.  The *batcher* owns a
+fine-grained re-entrant lock serializing every lane-heap read/mutation
+(submit-side enqueues race the loop's batch formation otherwise — see
+``Batcher``); admission control composes on it so the depth check and
+the enqueue are one atomic section.  The *scheduler* lock serializes the
+batch body (formation + engine run + demux) between the loop thread and
+synchronous callers (flush, hot-swap drains, rollback).  Hot-swap holds
+the scheduler lock across drain + install, so the drain-under-the-old-
+program guarantee holds with the loop running.  The loop body itself is
+exception-tolerant: an unexpected error is logged and the loop keeps
+running rather than silently stranding every pending request.
 """
 
 from __future__ import annotations
 
 import asyncio
+import logging
 import threading
 import time
 from typing import Dict, Optional
@@ -35,6 +42,8 @@ from typing import Dict, Optional
 import numpy as np
 
 from .batching import Batcher, PRIORITIES, PRIORITY_RANK
+
+logger = logging.getLogger(__name__)
 
 # default per-lane queue-depth budget, in multiples of batch_capacity rows
 # (critical admits 8x what low does: overload rejects the low lanes first)
@@ -176,6 +185,15 @@ class Scheduler:
             self.server.metrics.record_admission_reject(priority)
             raise Overloaded(slot, priority, pending, limit)
 
+    def admit_and_enqueue(self, handle, x: np.ndarray) -> None:
+        """Atomic admission + enqueue: depth check and heap push happen
+        under the batcher lock, so N concurrent submits cannot all pass
+        the same check and collectively blow the lane budget."""
+        batcher = self.server.batcher
+        with batcher.lock:
+            self.admit(handle.slot, handle.priority, x.shape[0])
+            batcher.enqueue(handle, x)
+
     # -- the batch body (shared by the loop and the sync flush path) ---------
 
     def run_slot_batch(self, slot: str) -> int:
@@ -244,31 +262,51 @@ class Scheduler:
         return dl is not None and dl - now <= self.max_wait_ms / 1e3
 
     def _next_due_in(self, now: float) -> float:
-        """Seconds until some slot becomes due (sleep bound)."""
+        """Seconds until some slot becomes due (sleep bound).
+
+        Bounded by both the batching window of the oldest enqueue AND
+        the earliest queued deadline minus a window — ``_slot_due``
+        promises to serve deadline-at-risk work a window early, so the
+        sleep must wake in time to honor it (a deadline landing just
+        after a sleep starts must not be served/shed a window late)."""
+        batcher = self.server.batcher
         window = self.max_wait_ms / 1e3
         due_in = window
-        for slot in self.server.batcher.pending_slots():
-            oldest = self.server.batcher.oldest_enqueued_at(slot)
+        for slot in batcher.pending_slots():
+            oldest = batcher.oldest_enqueued_at(slot)
             if oldest is not None:
                 due_in = min(due_in, max(0.0, oldest + window - now))
+            dl = batcher.earliest_deadline(slot)
+            if dl is not None:
+                due_in = min(due_in, max(0.0, dl - window - now))
         return max(due_in, 1e-4)
 
     async def _run(self) -> None:
         while not self._stop:
-            now = time.perf_counter()
-            served = 0
-            for slot in self.server.batcher.pending_slots():
-                if self._slot_due(slot, now):
-                    served += self.run_slot_batch(slot)
-            if served:
-                # keep draining back-to-back under load, but yield so
-                # cross-thread wakes/cancellations get a turn
-                await asyncio.sleep(0)
-                continue
             try:
-                await asyncio.wait_for(
-                    self._wake.wait(), self._next_due_in(now)
+                now = time.perf_counter()
+                served = 0
+                for slot in self.server.batcher.pending_slots():
+                    if self._slot_due(slot, now):
+                        served += self.run_slot_batch(slot)
+                if served:
+                    # keep draining back-to-back under load, but yield
+                    # so cross-thread wakes/cancellations get a turn
+                    await asyncio.sleep(0)
+                    continue
+                try:
+                    await asyncio.wait_for(
+                        self._wake.wait(), self._next_due_in(now)
+                    )
+                except (asyncio.TimeoutError, TimeoutError):
+                    pass
+                self._wake.clear()
+            except Exception:
+                # a dead loop thread strands every pending request, so
+                # never let one bad iteration kill it: log loudly and
+                # keep serving (the recompile assertion included — the
+                # invariant violation is reported, traffic still moves)
+                logger.exception(
+                    "tm-scheduler loop iteration failed; continuing"
                 )
-            except (asyncio.TimeoutError, TimeoutError):
-                pass
-            self._wake.clear()
+                await asyncio.sleep(self.max_wait_ms / 1e3)

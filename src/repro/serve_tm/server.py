@@ -45,6 +45,7 @@ traffic always completes under the program it was submitted against.
 
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Dict, Optional
 
@@ -88,7 +89,9 @@ class TMServer:
         self.scheduler = Scheduler(
             self, max_wait_ms=max_wait_ms, lane_depth_rows=lane_depth_rows
         )
-        self._next_rid = 0
+        # itertools.count.__next__ is atomic in CPython: concurrent
+        # submits (loop thread + N callers) never mint duplicate rids
+        self._rid = itertools.count()
 
     # -- the continuous-batching lifecycle -----------------------------------
 
@@ -176,10 +179,12 @@ class TMServer:
         if timeout_ms is not None:
             deadline = time.perf_counter() + timeout_ms / 1e3
         handle = RequestHandle(
-            self._next_rid, slot, x.shape[0],
+            next(self._rid), slot, x.shape[0],
             priority=priority, deadline=deadline,
         )
-        self._next_rid += 1
+        handle.driver = (
+            "scheduler" if self.scheduler.running else "flush"
+        )
         return handle, x
 
     def submit(
@@ -196,11 +201,12 @@ class TMServer:
         flush() needed — block on ``handle.wait()`` or await
         ``handle.async_result()``); otherwise it waits for the next
         flush().  ``priority`` picks the lane, ``timeout_ms`` stamps a
-        deadline after which the request is shed instead of served."""
+        deadline after which the request is shed instead of served.
+
+        ``enqueue`` is internally serialized against the scheduler
+        loop's batch formation (the batcher lock), so callers may submit
+        from any thread while the loop runs."""
         handle, x = self._make_handle(slot, x, priority, timeout_ms)
-        handle.driver = (
-            "scheduler" if self.scheduler.running else "flush"
-        )
         self.batcher.enqueue(handle, x)
         if self.scheduler.running:
             self.scheduler.wake()
@@ -218,13 +224,15 @@ class TMServer:
 
         Raises the structured ``Overloaded`` when the (slot, lane) queue
         depth budget is exhausted — under sustained overload the low
-        lanes reject first.  Await the returned handle's
-        ``async_result()`` for completion."""
-        self.registry.get(slot)  # raise KeyError before admission math
-        xa = np.asarray(x)
-        rows = xa.shape[0] if xa.ndim == 2 else 1
-        self.scheduler.admit(slot, priority, rows)
-        return self.submit(slot, x, priority=priority, timeout_ms=timeout_ms)
+        lanes reject first.  The depth check and the enqueue are one
+        atomic section (batcher lock), so concurrent submitters cannot
+        collectively exceed the lane budget.  Await the returned
+        handle's ``async_result()`` for completion."""
+        handle, xv = self._make_handle(slot, x, priority, timeout_ms)
+        self.scheduler.admit_and_enqueue(handle, xv)
+        if self.scheduler.running:
+            self.scheduler.wake()
+        return handle
 
     def flush(self) -> None:
         """Drain every slot's queue through the engine (the sync driver;

@@ -7,6 +7,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import threading
 
 import numpy as np
 import pytest
@@ -430,6 +431,139 @@ def test_async_submit_admission_control_overload():
     assert s["lanes"]["critical"]["rejected"] == 0
     with pytest.raises(KeyError):
         asyncio.run(server.async_submit("nope", x_one))
+
+
+def test_concurrent_submits_race_live_loop_no_drops():
+    """Submit-side heap pushes run on caller threads while the loop
+    thread forms batches; without the batcher lock heapq's peek-then-pop
+    can pop a freshly-pushed earlier-deadline entry and silently drop it
+    (its handle never reaches a terminal state).  Hammer a live loop
+    from several threads with interleaved deadline/deadline-less
+    requests so lane-heap roots keep re-ordering: every handle must
+    complete bit-exactly and every rid must be unique."""
+    rng = np.random.default_rng(11)
+    cfg, acts, model = _random_model(rng, 4, 8, 32)
+    server = TMServer(CAP, backend="plan", max_wait_ms=0.2)
+    server.register("m", model)
+    server.start()
+    results = []
+    mu = threading.Lock()
+    n_threads = 4
+    start = threading.Barrier(n_threads)
+
+    def hammer(seed):
+        trng = np.random.default_rng(seed)
+        start.wait()
+        for i in range(25):
+            x = trng.integers(0, 2, (1 + i % 3, 32)).astype(np.uint8)
+            # far-future deadlines interleaved with deadline-less so
+            # every push contends for the heap root mid-formation
+            tmo = None if i % 2 else 30_000.0
+            h = server.submit(
+                "m", x, priority=PRIORITIES[i % 4], timeout_ms=tmo
+            )
+            with mu:
+                results.append((h, x))
+
+    threads = [
+        threading.Thread(target=hammer, args=(100 + t,))
+        for t in range(n_threads)
+    ]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for h, x in results:
+            assert (
+                h.wait(timeout=30.0) == _oracle_sums(cfg, acts, x).argmax(1)
+            ).all()
+        assert server.compile_cache_size() == 1
+    finally:
+        server.stop()
+    rids = [h.rid for h, _ in results]
+    assert len(set(rids)) == len(rids)
+    lanes = server.metrics.summary()["lanes"]
+    assert sum(lanes[p]["shed"] for p in PRIORITIES) == 0
+
+
+def test_scheduler_loop_survives_batch_exception():
+    """One failing loop iteration must not kill the tm-scheduler daemon
+    thread (a dead loop strands every pending request): the error is
+    logged, the loop keeps running, and the next iteration serves the
+    queue."""
+    rng = np.random.default_rng(13)
+    cfg, acts, model = _random_model(rng, 4, 8, 32)
+    server = TMServer(CAP, backend="plan", max_wait_ms=0.2)
+    server.register("m", model)
+    real = server.scheduler.run_slot_batch
+    calls = {"n": 0}
+
+    def flaky(slot):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected batch failure")
+        return real(slot)
+
+    server.scheduler.run_slot_batch = flaky
+    try:
+        server.start()
+        x = rng.integers(0, 2, (5, 32)).astype(np.uint8)
+        h = server.submit("m", x)
+        assert (
+            h.wait(timeout=30.0) == _oracle_sums(cfg, acts, x).argmax(1)
+        ).all()
+        assert server.scheduler.running
+        assert calls["n"] >= 2
+    finally:
+        server.scheduler.run_slot_batch = real
+        server.stop()
+
+
+def test_admission_and_enqueue_atomic_under_contention():
+    """The depth check and the enqueue are one atomic section: N racing
+    async submitters cannot all pass the same check and collectively
+    exceed the lane budget.  With no scheduler draining, exactly
+    budget/rows_each submits are admitted, the rest get Overloaded."""
+    rng = np.random.default_rng(12)
+    _, _, model = _random_model(rng, 4, 8, 32)
+    limit = CAP.batch_capacity
+    server = TMServer(CAP, backend="plan", lane_depth_rows={"low": limit})
+    server.register("m", model)
+    rows_each = limit // 4
+    n_threads = 8  # 2x oversubscribed: exactly half must be rejected
+    start = threading.Barrier(n_threads)
+    outcomes = []
+    mu = threading.Lock()
+
+    def submitter(seed):
+        x = np.random.default_rng(seed).integers(
+            0, 2, (rows_each, 32)
+        ).astype(np.uint8)
+        start.wait()
+        try:
+            asyncio.run(server.async_submit("m", x, priority="low"))
+            ok = True
+        except Overloaded:
+            ok = False
+        with mu:
+            outcomes.append(ok)
+
+    threads = [
+        threading.Thread(target=submitter, args=(200 + t,))
+        for t in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    admitted = sum(outcomes)
+    assert admitted == limit // rows_each
+    assert server.batcher.pending_rows("m", "low") == limit
+    assert server.metrics.summary()["lanes"]["low"]["rejected"] == (
+        n_threads - admitted
+    )
+    server.flush()  # don't strand the admitted backlog
 
 
 def test_deadline_shed_and_expired_terminal_state():

@@ -159,6 +159,27 @@ def test_cache_sharding_rules_head_dims():
         else:
             assert model_dims(sh) == [], leaf.shape
 
+    # head-size collision: with d_model=64, n_heads=8 the mLSTM C cache
+    # is [P, B, 8, 8, 8] — its per-head feature dims equal the head
+    # count, so rank+size alone matches the KV dim-3 pin.  The square
+    # trailing [hd, hd] signature must route it to the generic rule:
+    # the TRUE head dim 2 shards, the feature dims stay replicated.
+    import dataclasses
+
+    collide = dataclasses.replace(
+        get("xlstm-125m"), name="xlstm-collide", d_model=64, n_heads=8,
+        n_kv_heads=8,
+    )
+    shape = ShapeSpec("t", 64, 16, "decode")
+    c_specs = family_for(collide).cache_specs(collide, shape)
+    c_sh = shd.cache_shardings(collide, mesh, shape, c_specs)
+    for leaf, sh in zip(jax.tree.leaves(c_specs), jax.tree.leaves(c_sh)):
+        assert sh.spec[1] is not None
+        if leaf.ndim >= 3 and leaf.shape[2] == collide.n_heads:
+            assert model_dims(sh) == [2], leaf.shape
+        else:
+            assert model_dims(sh) == [], leaf.shape
+
     # Zamba2 hybrid: SSM state [G, E, B, H, N, P] head dim 3, conv
     # [G, E, B, K-1, d_conv] batch-only, shared KV [G, B, W, Hkv, hd]
     cfg, shape, leaves, shardings = specs_for("zamba2-2.7b")
