@@ -40,10 +40,23 @@ from __future__ import annotations
 
 import argparse
 import glob
+import importlib.util
 import json
 import os
 import subprocess
 import sys
+
+# the summary()/aggregate() key schema, loaded by FILE PATH so this gate
+# stays a standalone script (no src/ on sys.path, no jax import) — the
+# module is deliberately import-free pure data (see its docstring)
+_SCHEMA_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "..", "src", "repro", "serve_tm", "schema.py",
+)
+_spec = importlib.util.spec_from_file_location("_serve_schema_mod",
+                                               _SCHEMA_PATH)
+SCHEMA = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(SCHEMA)
 
 
 def baseline_json(ref: str, name: str, repo_dir: str):
@@ -131,6 +144,11 @@ def _serve_schema(data: dict):
                 errs.append(f"backends.{b} not bit-exact")
             if s.get("compile_cache_size") != 1:
                 errs.append(f"backends.{b} compile_cache_size != 1")
+            # every per-backend summary carries the FULL metrics schema
+            # (single source of truth: serve_tm/schema.py)
+            missing = [k for k in SCHEMA.SUMMARY_KEYS if k not in s]
+            if missing:
+                errs.append(f"backends.{b} summary missing {missing}")
     ov = data.get("overload")
     if not isinstance(ov, dict):
         return errs + ["missing 'overload' scenario"]
@@ -141,15 +159,15 @@ def _serve_schema(data: dict):
     lanes = ov.get("lanes")
     if not isinstance(lanes, dict):
         return errs + ["overload.lanes missing"]
-    for lane in ("critical", "high", "normal", "low"):
+    for lane in SCHEMA.LANES:
         stats = lanes.get(lane)
         if not isinstance(stats, dict):
             errs.append(f"overload.lanes.{lane} missing")
             continue
-        for key in ("completed", "shed", "rejected", "deadline_miss"):
-            if not isinstance(stats.get(key), int):
-                errs.append(f"overload.lanes.{lane}.{key} missing")
-        for pct in ("queue_delay_us", "latency_us"):
+        missing = [k for k in SCHEMA.LANE_KEYS if k not in stats]
+        if missing:
+            errs.append(f"overload.lanes.{lane} missing {missing}")
+        for pct in SCHEMA.PCT2_KEYS:
             if not {"p50", "p99"} <= set(stats.get(pct, {})):
                 errs.append(f"overload.lanes.{lane}.{pct} lacks p50/p99")
         if not isinstance(stats.get("slo_attainment"), (int, float)):
@@ -168,9 +186,74 @@ def _serve_schema(data: dict):
     return errs
 
 
+def _fleet_schema(data: dict):
+    """BENCH_tm_fleet.json-specific invariants -> error strings.
+
+    The pool sweep must be a non-empty bit-exact 1/2/4 scan, the
+    mid-traffic rollout must complete all three stages with ZERO dropped
+    and zero incorrect requests, and the canary-failure scenario must
+    abort at the canary and leave the fleet consistent on the old
+    checksum.  Full-mode runs additionally gate the scaling claim
+    (4-node aggregate >= 2x 1-node); tiny CI runs skip that one check —
+    a shared runner's relative engine speeds are not the claim."""
+    errs = []
+    sweep = data.get("pool_sweep")
+    if not isinstance(sweep, dict) or not sweep.get("points"):
+        return ["pool_sweep.points must be a non-empty list"]
+    for p in sweep["points"]:
+        n = p.get("nodes", "?")
+        if not isinstance(p.get("throughput_dps"), (int, float)):
+            errs.append(f"pool_sweep point nodes={n} lacks throughput_dps")
+        if p.get("bit_exact") is not True:
+            errs.append(f"pool_sweep point nodes={n} not bit-exact")
+    if not isinstance(sweep.get("scaling_4x_vs_1x"), (int, float)):
+        errs.append("pool_sweep.scaling_4x_vs_1x missing")
+    elif data.get("tiny") is False and sweep["scaling_4x_vs_1x"] < 2.0:
+        errs.append(
+            f"4-node aggregate only {sweep['scaling_4x_vs_1x']:.2f}x the "
+            f"1-node throughput (claim: >= 2x)"
+        )
+    ro = data.get("rollout_under_traffic")
+    if not isinstance(ro, dict):
+        errs.append("missing 'rollout_under_traffic' scenario")
+    else:
+        if ro.get("completed") is not True:
+            errs.append("rollout_under_traffic did not complete")
+        if ro.get("dropped") != 0:
+            errs.append(
+                f"rollout dropped {ro.get('dropped')} requests (must be 0)"
+            )
+        if ro.get("incorrect") != 0:
+            errs.append(
+                f"rollout served {ro.get('incorrect')} incorrect replies "
+                f"(must be 0)"
+            )
+        stages = [s.get("stage") for s in ro.get("stages", [])]
+        if stages != ["canary", "wave", "fleet"]:
+            errs.append(f"rollout stages {stages} != canary/wave/fleet")
+    cf = data.get("canary_failure")
+    if not isinstance(cf, dict):
+        errs.append("missing 'canary_failure' scenario")
+    else:
+        if cf.get("aborted") is not True:
+            errs.append("canary_failure did not abort")
+        if cf.get("failed_stage") != "canary":
+            errs.append(
+                f"bad artifact survived past the canary "
+                f"(failed at {cf.get('failed_stage')!r})"
+            )
+        if cf.get("fleet_consistent_on_old") is not True:
+            errs.append("fleet not consistent on the old checksum "
+                        "after the aborted rollout")
+        if cf.get("rollback_provenance_ok") is not True:
+            errs.append("rollback provenance missing on rolled-back nodes")
+    return errs
+
+
 SCHEMA_CHECKS = {
     "BENCH_tm_kernels.json": _kernels_schema,
     "BENCH_tm_serve.json": _serve_schema,
+    "BENCH_tm_fleet.json": _fleet_schema,
 }
 
 

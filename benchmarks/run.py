@@ -1,8 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only <suite>[,<suite>...]]
+    PYTHONPATH=src python -m benchmarks.run --list
 
-``--only`` selects suites so a CI job only pays for what it checks
+``--list`` prints the available suite names (for shell completion and CI
+matrix generation) and exits 0.  ``--only`` selects suites so a CI job only pays for what it checks
 (unknown names fail fast with exit code 2 — a typo must not silently
 skip a gate).  Prints ``name,us_per_call,derived`` CSV rows per the
 harness contract.  Wall times are CPU-container measurements of the
@@ -28,6 +30,7 @@ SUITES = {
     "tm_serve": "tm_serve",
     "tm_recal": "tm_recal",
     "tm_kernels": "tm_kernels",
+    "tm_fleet": "tm_fleet",
 }
 ALL = tuple(SUITES)
 
@@ -38,7 +41,15 @@ def main() -> int:
         "--only", type=str, default=",".join(ALL), metavar="SUITE[,SUITE]",
         help=f"comma-separated subset of {', '.join(ALL)}",
     )
+    ap.add_argument(
+        "--list", action="store_true",
+        help="print the available suite names (one per line) and exit 0",
+    )
     args = ap.parse_args()
+    if args.list:
+        for name in ALL:
+            print(name)
+        return 0
     wanted = [w.strip() for w in args.only.split(",") if w.strip()]
     unknown = [w for w in wanted if w not in SUITES]
     if unknown:

@@ -1,0 +1,352 @@
+"""Fleet benchmark: routed replica pools + canary artifact rollouts.
+
+Three scenarios, emitted to ``BENCH_tm_fleet.json`` (CWD) plus harness
+CSV rows:
+
+  * **pool sweep** — the same workload routed over pools of 1 / 2 / 4
+    heterogeneous-engine nodes; aggregate throughput is the SUM of the
+    per-node engine rates.  (This container is single-core, so the sweep
+    models n independent accelerator boxes: each node's backlog is
+    drained with no host contention and the per-node rates add, exactly
+    as n real edge boards would.  Wall-clock across threads would only
+    measure GIL arbitration.)  Every routed reply is checked bit-exact
+    against the dense oracle.
+  * **mid-traffic rollout** — a live 4-node fleet (loops running) keeps
+    serving router traffic while a new ``TMProgram`` ships canary →
+    wave → fleet-wide; the gate is ZERO dropped requests and every
+    reply matching the old or the new program's oracle.
+  * **canary failure** — a bad artifact dies at the canary's accuracy
+    gate and the WHOLE fleet rolls back: every node must end on the old
+    checksum with rollback provenance.
+
+    PYTHONPATH=src python -m benchmarks.run --only tm_fleet
+
+``BENCH_TINY=1`` shrinks capacities and traffic for the CI smoke step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel import CapacityPlan, TMProgram
+from repro.core import TMConfig, batch_class_sums, state_from_actions
+from repro.core.compress import encode
+from repro.fleet import FleetPool, RolloutAborted, RolloutManager, Router
+from repro.serve_tm import TMServer
+
+OUT_PATH = "BENCH_tm_fleet.json"
+
+POOL_SIZES = (1, 2, 4)
+ENGINE_CYCLE = ("interp", "plan", "popcount", "sharded")
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_TINY", "0") == "1"
+
+
+def _random_model(rng, M, C, F, density=0.03):
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = rng.random((M, C, 2 * F)) < density
+    return cfg, acts, encode(cfg, acts)
+
+
+def _oracle_preds(cfg, acts, X) -> np.ndarray:
+    return np.asarray(
+        batch_class_sums(cfg, state_from_actions(cfg, acts), jnp.asarray(X))
+    ).argmax(1).astype(np.int32)
+
+
+def _make_pool(n, capacity, slot, artifact, warm_features):
+    """n heterogeneous-engine TMServer nodes, warmed outside any window."""
+    pool = FleetPool()
+    for i in range(n):
+        node = TMServer(capacity, engine=ENGINE_CYCLE[i % len(ENGINE_CYCLE)])
+        node.register(slot, artifact)
+        node.class_sums(slot, np.zeros((1, warm_features), np.uint8))
+        pool.add(f"n{i}", node)
+    return pool
+
+
+# -- scenario 1: pool sweep --------------------------------------------------
+
+
+def _bench_pool_sweep(capacity, tiny):
+    """One fixed workload, routed over 1/2/4-node pools.  Loops stay
+    stopped so the router's least-depth choice spreads the queue, then
+    each node drains its own backlog contention-free (n independent
+    boxes); aggregate dps = sum of node rates (schema.py rollup)."""
+    rng = np.random.default_rng(11)
+    dims = (5, 12, 40) if tiny else (8, 16, 64)
+    cfg, acts, model = _random_model(rng, *dims)
+    art = TMProgram(capacity=capacity, model=model)
+    n_requests = 8 if tiny else 48
+    rows = capacity.batch_capacity
+    blocks = [
+        rng.integers(0, 2, (rows, cfg.n_features)).astype(np.uint8)
+        for _ in range(n_requests)
+    ]
+    oracles = [_oracle_preds(cfg, acts, x) for x in blocks]
+
+    points = []
+    for n in POOL_SIZES:
+        pool = _make_pool(n, capacity, "m", art, cfg.n_features)
+        router = Router(pool)
+        handles = [router.submit("m", x) for x in blocks]
+        routed = {}
+        for h in handles:
+            routed[h.routed_to] = routed.get(h.routed_to, 0) + 1
+        for _, node in pool.items():  # each box drains its own backlog
+            node.flush()
+        bit_exact = all(
+            np.array_equal(h.result(), y) for h, y in zip(handles, oracles)
+        )
+        summary = pool.metrics_summary()
+        agg = summary["aggregate"]
+        points.append({
+            "nodes": n,
+            "engines": [type(node.executor).__name__
+                        for _, node in pool.items()],
+            "requests": n_requests,
+            "rows": agg["rows"],
+            "throughput_dps": agg["throughput_dps"],
+            "per_node_dps": {
+                name: s["throughput_dps"]
+                for name, s in summary["nodes"].items()
+            },
+            "fill_ratio": agg["fill_ratio"],
+            "routed": routed,
+            "bit_exact": bit_exact,
+        })
+    dps = {p["nodes"]: p["throughput_dps"] for p in points}
+    return {
+        "model": dict(zip(("n_classes", "n_clauses", "n_features"), dims)),
+        "rows_per_request": rows,
+        "points": points,
+        "scaling_2x_vs_1x": dps[2] / dps[1],
+        "scaling_4x_vs_1x": dps[4] / dps[1],
+    }
+
+
+# -- scenario 2: mid-traffic rollout -----------------------------------------
+
+
+def _bench_rollout_under_traffic(capacity, tiny):
+    """A live 4-node fleet serves router traffic from a background
+    thread while v2 ships canary -> wave -> fleet.  Gates: zero dropped
+    requests, every reply matches the old OR new program's oracle, and
+    post-rollout traffic runs on v2."""
+    rng = np.random.default_rng(13)
+    dims = (5, 12, 40) if tiny else (8, 16, 64)
+    cfg1, acts1, m1 = _random_model(rng, *dims)
+    cfg2, acts2, m2 = _random_model(rng, *dims)
+    v1 = TMProgram(capacity=capacity, model=m1)
+    v2 = TMProgram(capacity=capacity, model=m2)
+    pool = _make_pool(4, capacity, "edge", v1, cfg1.n_features)
+    router = Router(pool)
+
+    n_blocks = 6 if tiny else 24
+    rows = max(2, capacity.batch_capacity // 4)
+    blocks = [
+        rng.integers(0, 2, (rows, cfg1.n_features)).astype(np.uint8)
+        for _ in range(n_blocks)
+    ]
+    holdout = rng.integers(
+        0, 2, (16 if tiny else 64, cfg1.n_features)
+    ).astype(np.uint8)
+    y2 = _oracle_preds(cfg2, acts2, holdout)  # the NEW program's truth
+
+    served = []  # (handle, x)
+    stop = threading.Event()
+
+    def traffic():
+        i = 0
+        while not stop.is_set():
+            x = blocks[i % n_blocks]
+            served.append((router.submit("edge", x), x))
+            i += 1
+            # stay under the single-core live service rate: an offered
+            # load above it grows every queue without bound and the
+            # rollout's gate waits inherit the backlog
+            time.sleep(0.001 if tiny else 0.004)
+
+    pool.start_all()
+    t_thread = threading.Thread(target=traffic, daemon=True)
+    try:
+        t_thread.start()
+        time.sleep(0.05)  # traffic in flight before the rollout starts
+        t0 = time.perf_counter()
+        report = RolloutManager(pool).rollout(
+            "edge", v2, holdout_x=holdout, holdout_y=y2,
+            min_accuracy=0.99,  # v2 must ace its own holdout on every node
+        )
+        rollout_s = time.perf_counter() - t0
+        time.sleep(0.05)  # post-rollout traffic on the new program
+    finally:
+        stop.set()
+        t_thread.join(timeout=30.0)
+        for h, _ in served:  # everything admitted must complete
+            try:
+                h.wait(timeout=300.0)
+            except Exception:
+                pass
+        pool.stop_all()
+
+    dropped = incorrect = on_v1 = on_v2 = 0
+    for h, x in served:
+        if h.status != "done":  # expired (shed) or still pending
+            dropped += 1
+            continue
+        preds = h.result()
+        if np.array_equal(preds, _oracle_preds(cfg1, acts1, x)):
+            on_v1 += 1
+        elif np.array_equal(preds, _oracle_preds(cfg2, acts2, x)):
+            on_v2 += 1
+        else:
+            incorrect += 1
+
+    fleet_on_v2 = all(
+        node.installed_checksum("edge") == v2.checksum
+        for _, node in pool.items()
+    )
+    return {
+        "nodes": 4,
+        "requests": len(served),
+        "dropped": dropped,
+        "incorrect": incorrect,
+        "served_on_old": on_v1,
+        "served_on_new": on_v2,
+        "rollout_ms": rollout_s * 1e3,
+        "completed": report.completed,
+        "baseline_accuracy": report.baseline_accuracy,
+        "fleet_on_new_checksum": fleet_on_v2,
+        "stages": [
+            {
+                "stage": s.stage,
+                "nodes": list(s.nodes),
+                "install_ms": s.install_s * 1e3,
+                "verify_ms": s.verify_s * 1e3,
+                "bit_exact": s.bit_exact,
+                "accuracy": s.accuracy,
+            }
+            for s in report.stages
+        ],
+    }
+
+
+# -- scenario 3: canary failure ----------------------------------------------
+
+
+def _bench_canary_failure(capacity, tiny):
+    """A bad artifact must die at the canary and the fleet must retreat:
+    every node back on the old checksum, rollback provenance recorded."""
+    rng = np.random.default_rng(17)
+    dims = (5, 12, 40) if tiny else (8, 16, 64)
+    cfg1, acts1, m1 = _random_model(rng, *dims)
+    _, _, bad = _random_model(rng, *dims)
+    v1 = TMProgram(capacity=capacity, model=m1)
+    v_bad = TMProgram(capacity=capacity, model=bad)
+    pool = _make_pool(4, capacity, "edge", v1, cfg1.n_features)
+    holdout = rng.integers(
+        0, 2, (16 if tiny else 64, cfg1.n_features)
+    ).astype(np.uint8)
+    y1 = _oracle_preds(cfg1, acts1, holdout)  # CURRENT program's truth
+
+    t0 = time.perf_counter()
+    aborted = None
+    try:
+        RolloutManager(pool).rollout(
+            "edge", v_bad, holdout_x=holdout, holdout_y=y1,
+        )
+    except RolloutAborted as e:
+        aborted = e
+    abort_s = time.perf_counter() - t0
+
+    fleet_consistent = all(
+        node.installed_checksum("edge") == v1.checksum
+        for _, node in pool.items()
+    )
+    rolled = aborted.report.rolled_back if aborted else ()
+    provenance_ok = aborted is not None and all(
+        pool.node(name).registry.get("edge").provenance.startswith(
+            "rollback:"
+        )
+        for name in rolled
+    )
+    return {
+        "nodes": 4,
+        "aborted": aborted is not None,
+        "failed_stage": aborted.stage if aborted else None,
+        "canary_accuracy": (
+            aborted.report.stages[-1].accuracy if aborted else None
+        ),
+        "baseline_accuracy": (
+            aborted.report.baseline_accuracy if aborted else None
+        ),
+        "rolled_back": list(rolled),
+        "fleet_consistent_on_old": fleet_consistent,
+        "rollback_provenance_ok": provenance_ok,
+        "abort_ms": abort_s * 1e3,
+    }
+
+
+def run():
+    tiny = _tiny()
+    capacity = CapacityPlan(
+        instruction_capacity=1024 if tiny else 4096,
+        feature_capacity=64 if tiny else 128,
+        class_capacity=16,
+        clause_capacity=32,
+        include_capacity=16 if tiny else 24,
+        batch_words=2 if tiny else 4,
+    )
+    sweep = _bench_pool_sweep(capacity, tiny)
+    rollout = _bench_rollout_under_traffic(capacity, tiny)
+    canary = _bench_canary_failure(capacity, tiny)
+    report = {
+        "bench": "tm_fleet",
+        "tiny": tiny,
+        "capacity": {
+            "instruction_capacity": capacity.instruction_capacity,
+            "feature_capacity": capacity.feature_capacity,
+            "batch_capacity": capacity.batch_capacity,
+        },
+        "pool_sweep": sweep,
+        "rollout_under_traffic": rollout,
+        "canary_failure": canary,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+
+    rows = []
+    for p in sweep["points"]:
+        rows.append((
+            f"tm_fleet_pool{p['nodes']}",
+            f"{1e6 * p['rows'] / max(p['throughput_dps'], 1e-9):.1f}",
+            f"dps={p['throughput_dps']:.0f}"
+            f";fill={p['fill_ratio']:.2f}"
+            f";exact={int(p['bit_exact'])}",
+        ))
+    rows.append((
+        "tm_fleet_rollout",
+        f"{rollout['rollout_ms'] * 1e3:.0f}",
+        f"dropped={rollout['dropped']}"
+        f";incorrect={rollout['incorrect']}"
+        f";on_new={rollout['served_on_new']}"
+        f";stages={len(rollout['stages'])}"
+        f";scal4x={sweep['scaling_4x_vs_1x']:.2f}",
+    ))
+    rows.append((
+        "tm_fleet_canary",
+        f"{canary['abort_ms'] * 1e3:.0f}",
+        f"aborted={int(canary['aborted'])}"
+        f";stage={canary['failed_stage']}"
+        f";consistent={int(canary['fleet_consistent_on_old'])}"
+        f";prov_ok={int(canary['rollback_provenance_ok'])}",
+    ))
+    return rows

@@ -40,19 +40,31 @@ from .engines import InterpEngine, PlanEngine, PopcountEngine, ShardedEngine
 from .program import FORMAT_VERSION, TMProgram
 from .facade import Accelerator
 
+# the structured serving exceptions and the ServingNode boundary are
+# stable public API on BOTH packages: deployment code that talks to an
+# Accelerator should not need a second import tree to catch its errors.
+# (Submodule imports only — safe against either package initializing
+# first; serve_tm's own init imports accel submodules the same way.)
+from ..serve_tm.batching import DeadlineExceeded
+from ..serve_tm.node import ServingNode
+from ..serve_tm.scheduler import Overloaded
+
 __all__ = [
     "Accelerator",
     "CapacityExceeded",
     "CapacityPlan",
+    "DeadlineExceeded",
     "ENGINES",
     "Engine",
     "EngineBase",
     "FORMAT_VERSION",
     "HEADROOM_KNOBS",
     "InterpEngine",
+    "Overloaded",
     "PlanEngine",
     "PopcountEngine",
     "QUANTA",
+    "ServingNode",
     "ShardedEngine",
     "TMProgram",
     "engine_names",

@@ -39,7 +39,6 @@ import numpy as np
 
 from ..core.compress import CompressedModel
 from .capacity import CapacityPlan
-from .engine import make_engine, select_engine
 from .program import TMProgram
 
 
@@ -62,15 +61,14 @@ class Accelerator:
         from ..serve_tm.server import TMServer
 
         self.plan = plan if plan is not None else CapacityPlan()
-        name = engine if engine is not None else select_engine(
-            self.plan, mesh=mesh
-        )
-        self.engine = make_engine(
-            name, self.plan, mesh=mesh, **(engine_options or {})
-        )
+        # engine selection/construction is the serving node's job (the
+        # ServingNode boundary): TMServer runs the same deterministic
+        # select_engine/make_engine path the façade used to duplicate
         self.server = TMServer(
-            self.plan, engine=self.engine, history_depth=history_depth
+            self.plan, engine=engine, mesh=mesh,
+            engine_options=engine_options, history_depth=history_depth,
         )
+        self.engine = self.server.executor
 
     @classmethod
     def for_models(
@@ -158,6 +156,25 @@ class Accelerator:
 
     def compile_cache_size(self) -> int:
         return self.server.compile_cache_size()
+
+    # -- the ServingNode boundary (fleet/recal operate on this surface) ------
+
+    def validate_model(self, model) -> None:
+        """The exact will-it-fit check this node's engine applies on
+        install (raises ``CapacityExceeded``)."""
+        self.server.validate_model(model)
+
+    def queue_depth(self, slot=None, priority=None) -> int:
+        return self.server.queue_depth(slot, priority)
+
+    def metrics_snapshot(self) -> dict:
+        return self.server.metrics_snapshot()
+
+    def installed_checksum(self, slot: str):
+        return self.server.installed_checksum(slot)
+
+    def installed_artifact(self, slot: str):
+        return self.server.installed_artifact(slot)
 
     @property
     def capacity(self) -> CapacityPlan:

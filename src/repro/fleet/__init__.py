@@ -1,0 +1,42 @@
+"""repro.fleet — routed replica pools with canary artifact rollouts.
+
+The fleet layer stacks on the ``ServingNode`` boundary (serve_tm/node.py):
+anything that satisfies the protocol — a ``TMServer``, the
+``repro.accel.Accelerator`` façade, a remote proxy — can join a pool,
+and the fleet machinery never reaches past the boundary into a node's
+registry, engine or scheduler.
+
+  pool.py      FleetPool — named membership, whole-fleet lifecycle,
+               capacity-validated slot deploys, aggregate metrics rollup
+  router.py    Router — capacity-fit + least-queue-depth routing with
+               PR-6 priority/deadline semantics, Overloaded failover and
+               hot-slot replication; structured NoEligibleNode
+  rollout.py   RolloutManager — canary → wave → fleet-wide TMProgram
+               shipping, gated per stage on installed checksum, served
+               bit-exactness and holdout accuracy, with fleet-wide
+               rollback (structured RolloutAborted carrying the
+               RolloutReport)
+"""
+
+from ..serve_tm.node import ServingNode
+from .pool import FleetPool
+from .rollout import (
+    RolloutAborted,
+    RolloutManager,
+    RolloutReport,
+    StageReport,
+    plan_stages,
+)
+from .router import NoEligibleNode, Router
+
+__all__ = [
+    "FleetPool",
+    "NoEligibleNode",
+    "RolloutAborted",
+    "RolloutManager",
+    "RolloutReport",
+    "Router",
+    "ServingNode",
+    "StageReport",
+    "plan_stages",
+]

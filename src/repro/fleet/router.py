@@ -1,0 +1,185 @@
+"""Fleet routing: capacity-fit filtering + least-queue-depth dispatch
+over a ``FleetPool``, speaking the same priority/deadline semantics as a
+single node.
+
+A request names a SLOT, not a node.  The router's job:
+
+  * eligibility — only nodes hosting the slot are candidates (placement
+    itself is capacity-fit filtered: ``replicate``/``FleetPool.install``
+    run each target node's own ``validate_model`` before programming);
+  * load balancing — among candidates, the node with the fewest pending
+    rows wins (ties break by pool join order, so routing is
+    deterministic for a given load picture);
+  * the PR-6 semantics ride through untouched — ``priority=`` picks the
+    lane and ``timeout_ms=`` stamps the deadline ON THE CHOSEN NODE,
+    whose scheduler applies EDF/shedding/admission exactly as if the
+    caller had spoken to it directly.  ``async_submit`` additionally
+    FAILS OVER on ``Overloaded``: if the least-loaded candidate's lane
+    budget is exhausted the router tries the next-least-loaded one, and
+    only when EVERY candidate rejects does the structured ``Overloaded``
+    propagate — a fleet is only overloaded when all of it is;
+  * hot-slot replication — ``replicate`` re-ships the slot's installed
+    ``TMProgram`` artifact to more nodes (least-loaded, capacity-fit
+    first), widening the candidate set under load.
+
+Every handle the router returns is tagged ``handle.routed_to`` with the
+chosen node's name, so callers (and the fleet bench) can audit placement
+without reaching through the boundary.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from ..accel.capacity import CapacityExceeded
+from ..serve_tm.node import ServingNode
+from ..serve_tm.scheduler import Overloaded
+from .pool import FleetPool
+
+
+class NoEligibleNode(RuntimeError):
+    """No pool member can serve the request.
+
+    Structured fields (``slot``, ``reason``, ``candidates``) so callers
+    can distinguish "slot deployed nowhere" from "no node fits"."""
+
+    def __init__(self, slot: str, reason: str, candidates: List[str]):
+        self.slot = slot
+        self.reason = reason
+        self.candidates = candidates
+        super().__init__(
+            f"no eligible node for slot {slot!r}: {reason} "
+            f"(pool members: {candidates or 'none'})"
+        )
+
+
+class Router:
+    def __init__(self, pool: FleetPool):
+        self.pool = pool
+
+    # -- candidate selection -------------------------------------------------
+
+    def candidates(self, slot: str) -> List[Tuple[str, ServingNode]]:
+        """Nodes hosting ``slot``, least-loaded first (pending rows
+        across all slots — the engine is shared per node, so the whole
+        backlog delays a new request, not just the slot's share).  Ties
+        break by pool join order."""
+        hosting = self.pool.nodes_with_slot(slot)
+        if not hosting:
+            raise NoEligibleNode(
+                slot, "no node hosts this slot — deploy or replicate it "
+                "first", self.pool.names(),
+            )
+        order = {name: i for i, name in enumerate(self.pool.names())}
+        return sorted(
+            hosting, key=lambda nn: (nn[1].queue_depth(), order[nn[0]])
+        )
+
+    def route(self, slot: str) -> Tuple[str, ServingNode]:
+        """The node the next request for ``slot`` should land on."""
+        return self.candidates(slot)[0]
+
+    # -- traffic -------------------------------------------------------------
+
+    def submit(
+        self,
+        slot: str,
+        x,
+        *,
+        priority: str = "normal",
+        timeout_ms: Optional[float] = None,
+    ):
+        """Queue the request on the least-loaded hosting node; returns
+        that node's ``RequestHandle`` tagged with ``.routed_to``."""
+        name, node = self.route(slot)
+        handle = node.submit(
+            slot, x, priority=priority, timeout_ms=timeout_ms
+        )
+        handle.routed_to = name
+        return handle
+
+    async def async_submit(
+        self,
+        slot: str,
+        x,
+        *,
+        priority: str = "normal",
+        timeout_ms: Optional[float] = None,
+    ):
+        """Admission-controlled submit with fleet failover: candidates
+        are tried least-loaded first and a node's ``Overloaded`` moves on
+        to the next; the last rejection propagates only when every
+        candidate's lane budget is exhausted."""
+        last: Optional[Overloaded] = None
+        for name, node in self.candidates(slot):
+            try:
+                handle = await node.async_submit(
+                    slot, x, priority=priority, timeout_ms=timeout_ms
+                )
+            except Overloaded as e:
+                last = e
+                continue
+            handle.routed_to = name
+            return handle
+        raise last
+
+    def infer(self, slot: str, x):
+        """Synchronous convenience: route + the node's submit/drain."""
+        _, node = self.route(slot)
+        return node.infer(slot, x)
+
+    # -- hot-slot replication ------------------------------------------------
+
+    def replicate(
+        self,
+        slot: str,
+        n: int = 1,
+        *,
+        artifact=None,
+        provenance: Optional[str] = None,
+    ) -> List[str]:
+        """Install ``slot`` on up to ``n`` more nodes (hot-slot scaling).
+
+        The artifact re-shipped is the one a hosting node records for the
+        slot (``installed_checksum``'s subject), unless ``artifact``
+        overrides it.  Targets are the non-hosting nodes whose OWN
+        capacity check accepts the model — capacity-fit filtering, the
+        per-node half of routing — least-loaded first.  Returns the node
+        names that received the slot (may be shorter than ``n`` when the
+        fleet runs out of fitting nodes)."""
+        hosting = self.pool.nodes_with_slot(slot)
+        if artifact is None:
+            if not hosting:
+                raise NoEligibleNode(
+                    slot, "no node hosts this slot and no artifact was "
+                    "given to replicate from", self.pool.names(),
+                )
+            src_name, src = hosting[0]
+            artifact = src.installed_artifact(slot)
+            if artifact is None:
+                raise ValueError(
+                    f"slot {slot!r} on node {src_name!r} was programmed "
+                    f"from a bare model, not a TMProgram artifact — "
+                    f"pass artifact= to replicate it"
+                )
+            if provenance is None:
+                provenance = f"replicate:{src_name}"
+        if provenance is None:
+            provenance = "replicate"
+        hosting_names = {name for name, _ in hosting}
+        order = {name: i for i, name in enumerate(self.pool.names())}
+        targets = []
+        for name, node in self.pool.items():
+            if name in hosting_names:
+                continue
+            try:
+                node.validate_model(artifact.model)
+            except CapacityExceeded:
+                continue  # capacity-fit filtering: this node can't host it
+            targets.append((name, node))
+        targets.sort(key=lambda nn: (nn[1].queue_depth(), order[nn[0]]))
+        installed = []
+        for name, node in targets[: max(0, n)]:
+            node.register(slot, artifact, provenance=provenance)
+            installed.append(name)
+        return installed

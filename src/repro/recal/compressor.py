@@ -59,7 +59,10 @@ class Compressor:
         self.probe_seed = probe_seed
         self.engine = engine
         if plan is None and engine is not None:
-            plan = engine.plan
+            # engines carry .plan; ServingNode-shaped gates carry .capacity
+            plan = getattr(engine, "plan", None)
+            if plan is None:
+                plan = getattr(engine, "capacity", None)
         self.plan = plan
         self.validate_knobs = validate_knobs
 

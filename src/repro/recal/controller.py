@@ -75,14 +75,19 @@ class RecalController:
             # stamp publications against the server's negotiated capacity
             # plan when it exposes one: every recal swap then ships a
             # checksummed TMProgram artifact (reprogram-over-the-wire).
-            # Gating on the serving ENGINE means the capacity half of the
-            # gate is exactly the check the hot-swap will repeat.
-            eng = getattr(server, "engine", None)
-            if eng is None:
-                eng = getattr(server, "executor", None)
+            # Gating on the serving NODE's own validate_model (the
+            # ServingNode boundary) means the capacity half of the gate
+            # is exactly the check the hot-swap will repeat — without
+            # reaching for the node's engine internals.  Legacy
+            # server-shaped objects fall back to their engine attribute.
+            gate = server if hasattr(server, "validate_model") else None
+            if gate is None:
+                eng = getattr(server, "engine", None)
+                if eng is None:
+                    eng = getattr(server, "executor", None)
+                gate = eng if hasattr(eng, "validate_model") else None
             compressor = Compressor(
-                plan=getattr(server, "capacity", None),
-                engine=eng if hasattr(eng, "validate_model") else None,
+                plan=getattr(server, "capacity", None), engine=gate,
             )
         self.compressor = compressor
         self.epochs_per_recal = epochs_per_recal

@@ -15,8 +15,17 @@ registry); this package is the serving machinery on top of it:
                  percentiles, sheds, rejects, SLO attainment
   server.py      TMServer — multi-tenant submit/flush/infer plus the
                  async front door (start/stop, async_submit)
+  node.py        ServingNode — the node boundary repro.fleet routes over
+                 and repro.recal publishes through
+  schema.py      the ServeMetrics.summary() key schema (single source of
+                 truth for the golden test / regression gate / docs)
   executors.py   DEPRECATED shim: the old ServeCapacity/executor names,
                  re-exported from repro.accel (warns on import)
+
+The structured exceptions are stable public API here and on
+``repro.accel``: ``Overloaded`` (admission control), ``DeadlineExceeded``
+(a shed request), ``CapacityExceeded`` (a model that doesn't fit the
+synthesis-time envelope).
 
 The legacy executor names below are re-exported from ``repro.accel``
 directly (NOT via the shim) so importing this package stays silent;
@@ -24,6 +33,7 @@ importing ``repro.serve_tm.executors`` itself raises the deprecation
 warning.
 """
 
+from ..accel.capacity import CapacityExceeded
 from ..accel.capacity import CapacityPlan as ServeCapacity
 from ..accel.engine import ENGINES as BACKENDS
 from ..accel.engine import make_engine as make_executor
@@ -40,6 +50,7 @@ from .batching import (
     RequestHandle,
 )
 from .metrics import ServeMetrics
+from .node import ServingNode
 from .registry import ModelRegistry, SlotEntry
 from .scheduler import Overloaded, Scheduler
 from .server import TMServer
@@ -47,6 +58,7 @@ from .server import TMServer
 __all__ = [
     "BACKENDS",
     "Batcher",
+    "CapacityExceeded",
     "DeadlineExceeded",
     "InterpExecutor",
     "ModelRegistry",
@@ -58,6 +70,7 @@ __all__ = [
     "Scheduler",
     "ServeCapacity",
     "ServeMetrics",
+    "ServingNode",
     "ShardedExecutor",
     "SlotEntry",
     "TMServer",

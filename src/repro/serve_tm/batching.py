@@ -38,8 +38,10 @@ import numpy as np
 
 WORD = 32  # datapoints per bit-packed word (paper batching)
 
-# service order: batch formation drains lanes left to right
-PRIORITIES = ("critical", "high", "normal", "low")
+# service order: batch formation drains lanes left to right (the lane
+# list itself lives in schema.py — the summary()-schema source of truth)
+from .schema import LANES as PRIORITIES  # noqa: E402
+
 PRIORITY_RANK = {p: i for i, p in enumerate(PRIORITIES)}
 
 

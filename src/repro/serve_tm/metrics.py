@@ -9,7 +9,9 @@ admission rejects, plus SLO attainment.  ``summary()`` renders the
 JSON-friendly dict that ``benchmarks/tm_serve.py`` emits into
 BENCH_tm_serve.json.
 
-``summary()`` schema (documented in docs/accel.md §Serving metrics):
+``summary()`` schema (pinned by serve_tm/schema.py — the single source
+of truth the golden-schema test, benchmarks/check_regression.py and the
+docs/accel.md table are all held to):
 
   batches, rows, requests_completed, swaps      int counters
   fill_ratio                                    rows / padded engine rows
@@ -152,6 +154,54 @@ class ServeMetrics:
                 self.lane_in_slo[lane] / terminal if terminal else 1.0
             ),
         }
+
+    @classmethod
+    def aggregate(cls, snapshots: "List[Dict]") -> Dict:
+        """Fleet-level rollup of per-node ``summary()`` snapshots (the
+        ``ServingNode.metrics_snapshot()`` dicts a pool collects).
+
+        Counters sum across nodes.  ``throughput_dps`` is the fleet's
+        aggregate serving capacity: nodes execute in PARALLEL (each is
+        its own accelerator), so the fleet rate is the SUM of per-node
+        rates (rows_i / engine_seconds_i), not total-rows over
+        total-engine-seconds — the latter would model nodes taking
+        turns.  Per-node engine seconds are recovered from each
+        snapshot's own rows/throughput ratio.  Percentiles are NOT
+        merged (they can't be, from summaries); read them per node.
+        Schema pinned as ``AGGREGATE_KEYS`` in serve_tm/schema.py."""
+        agg: Dict = {"nodes": len(snapshots)}
+        for key in ("batches", "rows", "requests_completed", "swaps",
+                    "sheds", "admission_rejects", "deadline_misses",
+                    "recals", "rollbacks"):
+            agg[key] = sum(int(s[key]) for s in snapshots)
+        agg["throughput_dps"] = float(sum(
+            s["throughput_dps"] for s in snapshots
+        ))
+        padded = sum(
+            s["rows"] / s["fill_ratio"] for s in snapshots
+            if s["fill_ratio"] > 0
+        )
+        agg["fill_ratio"] = agg["rows"] / padded if padded else 0.0
+        lanes: Dict = {}
+        for lane in PRIORITIES:
+            stats = [s["lanes"][lane] for s in snapshots]
+            completed = sum(t["completed"] for t in stats)
+            shed = sum(t["shed"] for t in stats)
+            in_slo = sum(
+                round(t["slo_attainment"] * (t["completed"] + t["shed"]))
+                for t in stats
+            )
+            lanes[lane] = {
+                "completed": completed,
+                "shed": shed,
+                "rejected": sum(t["rejected"] for t in stats),
+                "deadline_miss": sum(t["deadline_miss"] for t in stats),
+                "slo_attainment": (
+                    in_slo / (completed + shed) if completed + shed else 1.0
+                ),
+            }
+        agg["lanes"] = lanes
+        return agg
 
     def summary(self) -> Dict:
         engine_total = sum(self.engine_s)

@@ -252,6 +252,47 @@ class TMServer:
         entry = self.registry.get(slot)
         return self.executor.class_sums(entry.program, np.asarray(x, np.uint8))
 
+    # -- the ServingNode boundary (what fleets/recal loops operate on) -------
+
+    def slots(self) -> "list[str]":
+        return self.registry.names()
+
+    def validate_model(self, model) -> None:
+        """The exact will-it-fit check this node's engine applies on
+        install (raises ``CapacityExceeded``) — the node-boundary gate a
+        publication/rollout runs so a passed artifact can never crash the
+        hot-swap."""
+        self.executor.validate_model(model)
+
+    def queue_depth(
+        self, slot: Optional[str] = None, priority: Optional[str] = None
+    ) -> int:
+        """Pending rows queued on this node (the router's load signal).
+        ``slot``/``priority`` narrow the count; None sums everything."""
+        if slot is not None:
+            return self.batcher.pending_rows(slot, priority)
+        return sum(
+            self.batcher.pending_rows(s, priority)
+            for s in self.batcher.pending_slots()
+        )
+
+    def metrics_snapshot(self) -> dict:
+        """The per-lane ``ServeMetrics.summary()`` dict (schema pinned by
+        serve_tm/schema.py) — what a fleet aggregates across nodes."""
+        return self.metrics.summary()
+
+    def installed_checksum(self, slot: str) -> Optional[int]:
+        """CRC-32 of the artifact ``slot`` is running (None when the slot
+        was programmed from a bare model rather than a ``TMProgram``).
+        Rollout gating audits this against the shipped artifact."""
+        artifact = self.registry.get(slot).artifact
+        return None if artifact is None else artifact.checksum
+
+    def installed_artifact(self, slot: str):
+        """The ``TMProgram`` artifact ``slot`` is running, if it was
+        installed from one (hot-slot replication re-ships it)."""
+        return self.registry.get(slot).artifact
+
     # -- internals -----------------------------------------------------------
 
     def compile_cache_size(self) -> int:

@@ -1,0 +1,146 @@
+"""Golden-schema and harness-CLI contracts.
+
+``src/repro/serve_tm/schema.py`` is the single source of truth for the
+``ServeMetrics.summary()`` / ``aggregate()`` key schema; three renderers
+must agree with it byte-for-byte: the metrics builder itself, the
+``benchmarks/check_regression.py`` gate (which loads the schema by file
+path), and the docs/accel.md "Serving metrics" table.  These tests pin
+all three, plus the ``benchmarks.run`` CLI contract (``--list`` exits 0
+with the suite names; an unknown ``--only`` exits 2).
+"""
+
+import importlib.util
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import TMConfig
+from repro.core.compress import encode
+from repro.serve_tm import PRIORITIES, ServeCapacity, ServeMetrics, TMServer
+from repro.serve_tm import schema
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CAP = ServeCapacity(
+    instruction_capacity=256, feature_capacity=32, class_capacity=4,
+    clause_capacity=8, include_capacity=8, batch_words=1,
+)
+
+
+def _summary_with_traffic():
+    rng = np.random.default_rng(0)
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=16)
+    model = encode(cfg, rng.random((3, 6, 32)) < 0.1)
+    server = TMServer(CAP)
+    server.register("m", model)
+    for _ in range(3):
+        server.submit("m", rng.integers(0, 2, (4, 16)).astype(np.uint8))
+    server.flush()
+    return server.metrics.summary()
+
+
+# -- the metrics builder -----------------------------------------------------
+
+
+def test_summary_keys_are_exactly_the_schema():
+    for summary in (ServeMetrics().summary(), _summary_with_traffic()):
+        assert tuple(summary.keys()) == schema.SUMMARY_KEYS
+        assert tuple(summary["lanes"].keys()) == schema.LANES
+        for lane, stats in summary["lanes"].items():
+            assert tuple(stats.keys()) == schema.LANE_KEYS, lane
+            for pct in schema.PCT2_KEYS:
+                assert set(stats[pct]) == {"p50", "p99"}
+        for pct in schema.PCT3_KEYS:
+            assert set(summary[pct]) == {"p50", "p95", "p99"}
+
+
+def test_aggregate_keys_are_exactly_the_schema():
+    snaps = [_summary_with_traffic(), ServeMetrics().summary()]
+    agg = ServeMetrics.aggregate(snaps)
+    assert tuple(agg.keys()) == schema.AGGREGATE_KEYS
+    assert agg["nodes"] == 2
+    assert tuple(agg["lanes"].keys()) == schema.LANES
+    for stats in agg["lanes"].values():
+        assert tuple(stats.keys()) == schema.AGGREGATE_LANE_KEYS
+    assert agg["rows"] == sum(s["rows"] for s in snaps)
+
+
+def test_batching_priorities_are_the_schema_lanes():
+    assert PRIORITIES is schema.LANES
+
+
+# -- the regression gate -----------------------------------------------------
+
+
+def _load_check_regression():
+    spec = importlib.util.spec_from_file_location(
+        "check_regression",
+        os.path.join(REPO, "benchmarks", "check_regression.py"),
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_regression_loads_the_same_schema():
+    cr = _load_check_regression()
+    assert cr.SCHEMA.SUMMARY_KEYS == schema.SUMMARY_KEYS
+    assert cr.SCHEMA.LANE_KEYS == schema.LANE_KEYS
+    assert cr.SCHEMA.LANES == schema.LANES
+
+
+def test_check_regression_rejects_summary_missing_schema_keys():
+    """A backend summary that drops ANY schema key must fail the gate."""
+    cr = _load_check_regression()
+    full = _summary_with_traffic()
+    full["bit_exact"] = True
+    full["compile_cache_size"] = 1
+    for key in schema.SUMMARY_KEYS:
+        broken = {k: v for k, v in full.items() if k != key}
+        broken["bit_exact"] = True
+        broken["compile_cache_size"] = 1
+        errs = cr._serve_schema({"backends": {"plan": broken}})
+        assert any(key in e for e in errs), f"dropping {key!r} not caught"
+
+
+# -- the docs table ----------------------------------------------------------
+
+
+def test_docs_metrics_table_documents_every_schema_key():
+    with open(os.path.join(REPO, "docs", "accel.md")) as f:
+        doc = f.read()
+    start = doc.index("### Serving metrics")
+    end = doc.index("## ", start + 4)
+    table = doc[start:end]
+    for key in schema.SUMMARY_KEYS + schema.LANE_KEYS:
+        assert key in table, f"docs/accel.md metrics table lacks {key!r}"
+
+
+# -- the benchmarks.run CLI --------------------------------------------------
+
+
+def _run_harness(*argv):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *argv],
+        capture_output=True, text=True, cwd=REPO, env=env, timeout=120,
+    )
+
+
+def test_run_list_prints_suites_and_exits_zero():
+    out = _run_harness("--list")
+    assert out.returncode == 0, out.stderr
+    names = out.stdout.split()
+    assert names == list(dict.fromkeys(names))  # no duplicates
+    for expected in ("table1", "tm_serve", "tm_recal", "tm_kernels",
+                     "tm_fleet"):
+        assert expected in names
+
+
+def test_run_unknown_only_exits_two():
+    out = _run_harness("--only", "definitely_not_a_suite")
+    assert out.returncode == 2
+    assert "unknown" in out.stderr
+    assert "definitely_not_a_suite" in out.stderr
