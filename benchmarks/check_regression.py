@@ -250,10 +250,48 @@ def _fleet_schema(data: dict):
     return errs
 
 
+def _recal_schema(data: dict):
+    """BENCH_tm_recal.json-specific invariants -> error strings.
+
+    The per-TrainEngine comparison must carry the reference and packed
+    columns, every column must be bit-identical to the reference (a speed
+    number for a diverging trainer is meaningless), and full-mode runs
+    additionally gate the fused-kernel claim: packed fit_step/s beats the
+    reference host path.  Tiny CI runs skip the throughput ordering — a
+    shared runner's relative engine speeds are not the claim."""
+    errs = []
+    te = data.get("train_engines")
+    if not isinstance(te, dict) or not te:
+        return ["train_engines must be a non-empty object"]
+    for req in ("reference", "packed"):
+        if req not in te:
+            errs.append(f"train_engines missing the {req!r} column")
+    for name, s in te.items():
+        if not isinstance(s, dict) or not isinstance(
+            s.get("steps_per_s"), (int, float)
+        ):
+            errs.append(f"train_engines.{name} lacks numeric steps_per_s")
+            continue
+        if s.get("bit_identical") is not True:
+            errs.append(f"train_engines.{name} not bit-identical to reference")
+    if errs:
+        return errs
+    if data.get("tiny") is False:
+        ref = te["reference"]["steps_per_s"]
+        pk = te["packed"]["steps_per_s"]
+        if pk <= ref:
+            errs.append(
+                f"packed engine {pk:.1f} steps/s did not beat the reference "
+                f"{ref:.1f} steps/s (the fused-kernel claim)"
+            )
+    return errs
+
+
 SCHEMA_CHECKS = {
     "BENCH_tm_kernels.json": _kernels_schema,
     "BENCH_tm_serve.json": _serve_schema,
     "BENCH_tm_fleet.json": _fleet_schema,
+    "BENCH_tm_recal.json": _recal_schema,
 }
 
 

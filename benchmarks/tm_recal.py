@@ -1,9 +1,12 @@
 """Recalibration-pipeline benchmark: the Fig-8 loop under the clock.
 
-Measures the three costs that bound how fast a deployment can chase drift:
+Measures the costs that bound how fast a deployment can chase drift:
 
   * trainer throughput  — ``fit_step``s/sec (and samples/sec) of the
-    incremental training node;
+    incremental training node, per TrainEngine plugin ('reference' host
+    path vs the fused packed-TA 'packed' kernel vs the 'sharded'
+    dist-mesh step, all replaying the identical (key, step, batch)
+    sequence — the column doubles as a bit-identity check);
   * swap-to-first-correct-prediction latency — wall time from calling
     ``register`` (drain-then-swap) on a live slot to a served, correct
     prediction under the NEW model;
@@ -26,11 +29,17 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TMConfig
 from repro.data.pipeline import TMDatasetSpec, booleanized_tm_dataset
-from repro.recal import DriftMonitor, RecalController, RecalWorker
+from repro.recal import (
+    DriftMonitor,
+    RecalController,
+    RecalWorker,
+    make_train_engine,
+)
 from repro.serve_tm import ServeCapacity, TMServer
 
 OUT_PATH = "BENCH_tm_recal.json"
@@ -55,6 +64,52 @@ def _bench_trainer(worker, x, y, batch: int, steps: int) -> dict:
         "samples_per_s": steps * batch / dt,
         "us_per_step": dt / steps * 1e6,
     }
+
+
+def _bench_train_engines(cfg, state0, x, y, batch: int, steps: int) -> dict:
+    """Per-TrainEngine steady-state fit_step throughput on identical work.
+
+    Every engine replays the SAME (key, step, batch) sequence from the
+    same initial state — the throughput column therefore doubles as a
+    bit-identity audit: each engine's final canonical state must equal
+    the reference's (``bit_identical``), or the speed number is
+    meaningless.  The sharded engine runs on a 1x1 mesh here (the
+    single-process bench box); its column measures shard_map overhead at
+    trivial scale, not scaling."""
+    xb = jnp.asarray(np.asarray(x[:batch], np.uint8))
+    yb = jnp.asarray(np.asarray(y[:batch], np.int32))
+    key = jax.random.key(0x7E57)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    engines = {
+        "reference": make_train_engine("reference", cfg),
+        "packed": make_train_engine("packed", cfg),
+        "sharded": make_train_engine("sharded", cfg, mesh=mesh, batch=batch),
+    }
+    out, finals = {}, {}
+    for name, eng in engines.items():
+        internal = eng.prepare(state0)
+        internal = eng.fit_step(internal, key, xb, yb, step=0)  # warm jit
+        jax.block_until_ready(internal)
+        t0 = time.perf_counter()
+        for s in range(1, steps + 1):
+            internal = eng.fit_step(internal, key, xb, yb, step=s)
+        jax.block_until_ready(internal)
+        dt = time.perf_counter() - t0
+        finals[name] = np.asarray(eng.canonical(internal))
+        out[name] = {
+            "steps_timed": steps,
+            "steps_per_s": steps / dt,
+            "samples_per_s": steps * batch / dt,
+            "us_per_step": dt / steps * 1e6,
+        }
+    for name, stats in out.items():
+        stats["bit_identical"] = bool(
+            np.array_equal(finals[name], finals["reference"])
+        )
+        stats["speedup_vs_reference"] = (
+            stats["steps_per_s"] / out["reference"]["steps_per_s"]
+        )
+    return out
 
 
 def _swap_to_first_correct(server, slot, model, probe_x, probe_y) -> float:
@@ -91,6 +146,10 @@ def run():
     worker.fine_tune_epochs(xb, y, epochs=epochs_initial, batch=batch)
 
     train_stats = _bench_trainer(worker, xb, y, batch, timed_steps)
+    train_stats["engine"] = worker.train_engine
+    engine_stats = _bench_train_engines(
+        cfg, jnp.asarray(worker.snapshot()), xb, y, batch, timed_steps
+    )
 
     server = TMServer(
         ServeCapacity(feature_capacity=128, instruction_capacity=8192),
@@ -161,6 +220,7 @@ def run():
         },
         "baseline_acc": baseline_acc,
         "train": train_stats,
+        "train_engines": engine_stats,
         "swap_to_first_correct_us": swap_s * 1e6,
         "curve": curve,
         "recals": summary["recals"],
@@ -182,6 +242,15 @@ def run():
             f"{train_stats['us_per_step']:.1f}",
             f"steps_per_s={train_stats['steps_per_s']:.1f}"
             f";samples_per_s={train_stats['samples_per_s']:.0f}",
+        ),
+        (
+            "tm_recal_train_engines",
+            f"{engine_stats['packed']['speedup_vs_reference']:.2f}",
+            ";".join(
+                f"{n}={s['steps_per_s']:.1f}steps_per_s"
+                f"(bit_identical={s['bit_identical']})"
+                for n, s in engine_stats.items()
+            ),
         ),
         (
             "tm_recal_swap",

@@ -57,6 +57,29 @@ def sample_keys(key: Array, n: int, offset: Array | int = 0) -> Array:
     )
 
 
+def validate_batch_capacity(n_rows: int, plan, what: str = "training batch"):
+    """Raise the structured ``CapacityExceeded`` when a training batch
+    blows through a negotiated ``CapacityPlan``'s batch words.
+
+    The trainers share the accelerator's batch envelope semantics (32
+    datapoints per bit-packed word): a training node co-located with the
+    serving node trains inside the same synthesis-time staging depth it
+    serves from, and callers can react programmatically (``.knob`` /
+    ``.required`` / ``.capacity``) instead of parsing an assert message.
+    Imported lazily — ``repro.accel`` depends on ``repro.core``, not the
+    other way around.
+    """
+    if plan is None:
+        return
+    from ..accel.capacity import CapacityExceeded
+
+    n_rows = int(n_rows)
+    if n_rows > plan.batch_words * 32:
+        raise CapacityExceeded(
+            "batch_words", -(-n_rows // 32), plan.batch_words, what
+        )
+
+
 def _type_i_delta(cfg: TMConfig, key: Array, clause_out: Array, lits: Array) -> Array:
     """Type I state delta for ALL clauses of one class.
 
@@ -86,18 +109,26 @@ def _type_ii_delta(
     return push.astype(jnp.int32)
 
 
-def _class_feedback(
+def _feedback_from_clause_outputs(
     cfg: TMConfig,
     key: Array,
     class_state: Array,  # int32[C, 2F]
+    actions: Array,  # bool[C, 2F]  (class_state > N)
+    sat: Array,  # bool[C]  training-semantics clause outputs (empty -> 1)
     lits: Array,  # bool[2F]
     is_target: Array,  # bool scalar
 ) -> Array:
-    """New state for one class given one sample."""
+    """New state for one class given its precomputed clause outputs.
+
+    The single source of truth for the Type I/II feedback math: every
+    trainer — dense (``_class_feedback``), class-sharded
+    (``sample_class_delta``) and the packed fused kernel
+    (``kernels.tm_train``) — funnels through this function, so the
+    stochastic selection and state increments are bit-identical by
+    construction, whatever representation computed ``sat``.
+    """
     N = cfg.n_states
     T = cfg.threshold
-    actions = class_state > N
-    sat = jnp.all(jnp.where(actions, lits[None, :], True), axis=-1)  # train: empty->1
     pol = clause_polarities(cfg)  # +1/-1
     v = jnp.clip(jnp.sum(sat.astype(jnp.int32) * pol), -T, T)
 
@@ -113,6 +144,21 @@ def _class_feedback(
     d2 = _type_ii_delta(cfg, sat, lits, actions)
     delta = t1_mask[:, None] * d1 + t2_mask[:, None] * d2
     return jnp.clip(class_state + delta, 1, 2 * N)
+
+
+def _class_feedback(
+    cfg: TMConfig,
+    key: Array,
+    class_state: Array,  # int32[C, 2F]
+    lits: Array,  # bool[2F]
+    is_target: Array,  # bool scalar
+) -> Array:
+    """New state for one class given one sample."""
+    actions = class_state > cfg.n_states
+    sat = jnp.all(jnp.where(actions, lits[None, :], True), axis=-1)  # train: empty->1
+    return _feedback_from_clause_outputs(
+        cfg, key, class_state, actions, sat, lits, is_target
+    )
 
 
 def _sample_update(cfg: TMConfig, state: Array, key: Array, x: Array, y: Array) -> Array:
@@ -219,6 +265,7 @@ def fit_step(
     *,
     step: int,
     parallel: bool = False,
+    plan=None,
 ) -> Array:
     """One resumable training step (the RecalWorker's incremental API).
 
@@ -226,7 +273,13 @@ def fit_step(
     given (key, step, batch) triple is identical no matter how many steps
     ran before — a fine-tune loop can stop, checkpoint the (state, key,
     step) triple, and resume bit-exactly.
+
+    ``plan`` (an ``accel.CapacityPlan``) opts into the negotiated batch
+    envelope: a batch wider than ``plan.batch_words * 32`` raises the
+    structured ``CapacityExceeded`` instead of training outside the
+    synthesis-time staging depth.
     """
+    validate_batch_capacity(xb.shape[0], plan)
     kb = jax.random.fold_in(key, step)
     f = train_batch_parallel if parallel else train_batch
     return f(cfg, state, kb, xb, yb)

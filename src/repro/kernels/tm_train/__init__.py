@@ -1,0 +1,30 @@
+"""tm_train: fused packed-TA training (clause-eval + Type I/II feedback +
+TA update in one pass over packed uint32 literal bitplanes, int8 state).
+
+See ``kernel.py`` for the algorithm and the bit-reproducibility contract,
+``ops.py`` for the packed int8 ``(clauses, literals, 2)`` layout, and
+``repro.recal.train_engine`` for the serving-side plugin ('packed')."""
+
+from .kernel import fused_fit_step, fused_train_batch, packed_clause_words
+from .ops import (
+    MAX_PACKED_STATES,
+    check_packable,
+    pack_ta_state,
+    packed_include_actions,
+    supports_packed_states,
+    unpack_ta_state,
+)
+from .ref import fused_train_batch_ref
+
+__all__ = [
+    "MAX_PACKED_STATES",
+    "check_packable",
+    "fused_fit_step",
+    "fused_train_batch",
+    "fused_train_batch_ref",
+    "pack_ta_state",
+    "packed_clause_words",
+    "packed_include_actions",
+    "supports_packed_states",
+    "unpack_ta_state",
+]

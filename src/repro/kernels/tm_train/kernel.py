@@ -1,0 +1,172 @@
+"""Fused packed-TA training step: clause-eval + feedback + TA update in one
+compiled pass over packed uint32 literal bitplanes.
+
+What the reference trainer (``core.train.train_batch_parallel``) does per
+sample — dense clause evaluation over ``bool[C, 2F]``, a full
+``int32[M, C, 2F]`` delta tensor materialized per sample — this kernel
+restructures around the serving representation:
+
+  1. **Clause eval is the PR-4 popcount machinery.**  The batch is
+     bit-packed 32 datapoints per ``uint32`` word (``core.tm.
+     pack_literals``), clause outputs are computed ONCE for all classes
+     and all samples as packed words (AND over included literal rows —
+     the same formulation as ``packed_class_sums`` / ``tm_popcount``,
+     with training semantics: an all-excluded clause outputs 1), and the
+     per-sample clause-output rows are extracted through the 32x32
+     bitplane transpose (``tm_popcount.kernel.bit_transpose32``).
+  2. **TA states stay int8** in the flat ``(clauses, literals, 2)``
+     layout (``ops.pack_ta_state``); only the two class rows a sample
+     actually touches (target + sampled negative) are widened to int32
+     for the feedback arithmetic.
+  3. **Deltas are two rows, not M.**  Each sample contributes
+     ``int32[2, C, 2F]`` keyed by (target, negative) class ids,
+     scatter-added into the update — integer addition commutes, so the
+     result is bit-identical to the reference's summed ``[B, M, C, 2F]``
+     tensor at an M/2 memory-traffic discount.
+
+**Bit-reproducibility.**  All stochastic feedback comes from the same
+counter-based threefry streams as the reference path: the fold-in
+seeding contract keys sample ``i`` of step ``s`` as
+``fold_in(fold_in(key, s), i)``, and the per-(clause, literal) uniforms
+are drawn by the SHARED ``core.train._feedback_from_clause_outputs`` —
+the kernel only substitutes how clause outputs are computed (packed
+words vs dense bools, both exact).  Acceptance is bit-identical final TA
+state vs ``core.train.fit_step`` on the same (key, step), which
+``tests/test_train_engine.py`` property-tests.
+
+**Why XLA and not a Pallas lowering.**  The TPU Pallas PRNG
+(``pltpu.prng_random_bits``) is a hardware generator that cannot
+reproduce the threefry bit-streams the seeding contract promises, so a
+Pallas kernel could be fast but never bit-identical — the same reasoning
+that makes ``tm_popcount_xla`` the serving path off-TPU makes the fused
+XLA formulation the training path everywhere.  The packed layout is
+Pallas-shaped (uint32 panels, int8 state tiles) if the contract is ever
+relaxed to per-backend streams.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...core.tm import TMConfig, literals, pack_literals, unpack_bits
+from ...core.train import (
+    _feedback_from_clause_outputs,
+    sample_keys,
+    validate_batch_capacity,
+)
+from ..tm_popcount.kernel import bit_transpose32
+from .ops import packed_include_actions
+
+Array = jax.Array
+
+ONES = 0xFFFFFFFF
+
+
+def packed_clause_words(actions: Array, packed_lits: Array) -> Array:
+    """Training-semantics clause outputs, packed 32 datapoints per word.
+
+    actions: bool[M, C, 2F]; packed_lits: uint32[2F, W] -> uint32[M, C, W]
+    (bit b of word w = clause output for datapoint ``32w + b``; an
+    all-excluded clause ANDs nothing and stays all-ones — the training
+    convention, unlike inference's empty->0).
+    """
+    ones = jnp.uint32(ONES)
+
+    def clause_word(a_row):  # a_row: bool[2F]
+        masked = jnp.where(a_row[:, None], packed_lits, ones)
+        return jax.lax.reduce(
+            masked, ones, jnp.bitwise_and, dimensions=(0,)
+        )  # [W]
+
+    return jax.vmap(jax.vmap(clause_word))(actions)
+
+
+@partial(jax.jit, static_argnums=0, donate_argnums=1)
+def fused_train_batch(
+    cfg: TMConfig, packed: Array, key: Array, xb: Array, yb: Array
+) -> Array:
+    """One summed-delta batch update on the packed int8 state.
+
+    packed: int8[M, C, F, 2]; xb: {0,1}[B, F]; yb: int32[B] ->
+    int8[M, C, F, 2].  Bit-identical (after unpacking) to
+    ``core.train.train_batch_parallel`` under the same call key.
+    """
+    M, C, L, N = cfg.n_classes, cfg.n_clauses, cfg.n_literals, cfg.n_states
+    B = xb.shape[0]
+    xb = xb.astype(jnp.bool_)
+    lits_all = literals(xb)  # [B, 2F] dense (the feedback operand)
+
+    # -- packed clause evaluation (once, all classes x all samples) ----------
+    b_pad = -(-B // 32) * 32  # whole 32-datapoint words; pad rows unused
+    plits = pack_literals(jnp.pad(xb, ((0, b_pad - B), (0, 0))))  # [2F, W]
+    flat = packed.reshape(M, C, L)
+    actions = packed_include_actions(flat)  # [M, C, 2F]
+    cw = packed_clause_words(actions, plits)  # [M, C, W]
+    c_chunks = -(-C // 32)
+    cw = jnp.pad(cw, ((0, 0), (0, c_chunks * 32 - C), (0, 0)))
+    # planes[m, cc, b, w] bit j = output of clause 32cc+j for datapoint
+    # 32w+b — the PR-4 bitplane transpose, reused for per-sample extraction
+    planes = bit_transpose32(
+        cw.reshape(M, c_chunks, 32, cw.shape[-1]), axis=2
+    )
+
+    # -- per-sample feedback on the two touched class rows -------------------
+    def sample_rows(k, i, lits_i, y):
+        k_neg, k_tgt, k_not = jax.random.split(k, 3)
+        neg = jax.random.randint(k_neg, (), 0, M - 1)
+        neg = jnp.where(neg >= y, neg + 1, neg).astype(jnp.int32)
+        word, bit = i // 32, i % 32
+
+        def row_delta(kk, m, is_target):
+            sat_words = planes[m, :, bit, word]  # uint32[c_chunks]
+            sat = unpack_bits(sat_words)[:C].astype(jnp.bool_)
+            row = flat[m].astype(jnp.int32) + (N + 1)  # widen ONLY this row
+            new = _feedback_from_clause_outputs(
+                cfg, kk, row, actions[m], sat, lits_i, is_target
+            )
+            return new - row
+
+        d_t = row_delta(k_tgt, y, jnp.bool_(True))
+        d_n = row_delta(k_not, neg, jnp.bool_(False))
+        return jnp.stack([y, neg]), jnp.stack([d_t, d_n])
+
+    keys = sample_keys(key, B)
+    ids, deltas = jax.vmap(sample_rows)(
+        keys, jnp.arange(B), lits_all, yb
+    )  # int32[B, 2], int32[B, 2, C, 2F]
+
+    # -- scatter-add the 2B touched rows, clip in the centered int8 domain --
+    summed = (
+        jnp.zeros((M, C, L), jnp.int32)
+        .at[ids.reshape(-1)]
+        .add(deltas.reshape(-1, C, L))
+    )
+    # clip(state + d, 1, 2N) - (N+1)  ==  clip(packed + d, -N, N-1)
+    new_flat = jnp.clip(flat.astype(jnp.int32) + summed, -N, N - 1)
+    return new_flat.astype(jnp.int8).reshape(M, C, cfg.n_features, 2)
+
+
+def fused_fit_step(
+    cfg: TMConfig,
+    packed: Array,
+    key: Array,
+    xb: Array,
+    yb: Array,
+    *,
+    step: int,
+    plan=None,
+) -> Array:
+    """Resumable fused step under the fold-in seeding contract.
+
+    Same contract as ``core.train.fit_step``: the batch trains under
+    ``fold_in(key, step)`` and sample ``i`` under ``fold_in(call_key,
+    i)``, so (key, step, state) checkpoints round-trip bit-exactly
+    between this kernel and the reference/sharded paths.  ``plan`` opts
+    into the negotiated batch envelope (structured ``CapacityExceeded``).
+    """
+    validate_batch_capacity(xb.shape[0], plan)
+    kb = jax.random.fold_in(key, step)
+    return fused_train_batch(cfg, packed, kb, xb, yb)

@@ -1,0 +1,72 @@
+"""Packed int8 TA-state representation for the fused training path.
+
+The FPGA online-learning architecture (Prescott et al.) keeps TA states
+on-device as narrow counters; the C reference implementations
+(green_tsetlin et al.) use the flat ``(clauses, literals, 2)`` int8
+layout.  This module is the host-side adapter between the repo's
+canonical TA tensor — ``int32[M, C, 2F]`` with states in ``[1, 2N]`` and
+the interleaved literal order of ``core.tm`` (slot ``2k`` = feature k,
+``2k+1`` = NOT k) — and the packed form the fused kernel trains in:
+
+    ``int8[M, C, F, 2]``   with   packed = state - (N + 1)  in  [-N, N-1]
+
+The last axis is (literal, negated literal) — exactly the canonical
+interleaved ``2F`` axis reshaped to ``(F, 2)``, so packing is a
+subtract + cast + reshape, never a permutation.  The Include action
+becomes a sign test: ``state > N  <=>  packed >= 0``.
+
+int8 holds the full state range iff ``2N <= 256`` (``n_states <= 128``,
+the repo default); ``supports_packed_states`` / ``check_packable`` gate
+that — a config outside the int8 envelope must use the reference or
+sharded engines instead of silently wrapping.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.tm import TMConfig
+
+Array = jax.Array
+
+# packed = state - (n_states + 1); int8 range [-128, 127] holds
+# [1 - (N+1), 2N - (N+1)] = [-N, N-1] exactly when N <= 128
+MAX_PACKED_STATES = 128
+
+
+def supports_packed_states(cfg: TMConfig) -> bool:
+    """True when the config's TA range fits the int8 packed layout."""
+    return cfg.n_states <= MAX_PACKED_STATES
+
+
+def check_packable(cfg: TMConfig) -> None:
+    if not supports_packed_states(cfg):
+        raise ValueError(
+            f"packed int8 TA states hold at most 2*{MAX_PACKED_STATES} "
+            f"levels, but n_states={cfg.n_states} needs {2 * cfg.n_states}; "
+            f"use the 'reference' or 'sharded' train engines for this config"
+        )
+
+
+def pack_ta_state(cfg: TMConfig, state: Array) -> Array:
+    """Canonical ``int32[M, C, 2F]`` -> packed ``int8[M, C, F, 2]``."""
+    check_packable(cfg)
+    state = jnp.asarray(state)
+    packed = (state.astype(jnp.int32) - (cfg.n_states + 1)).astype(jnp.int8)
+    return packed.reshape(
+        cfg.n_classes, cfg.n_clauses, cfg.n_features, 2
+    )
+
+
+def unpack_ta_state(cfg: TMConfig, packed: Array) -> Array:
+    """Packed ``int8[M, C, F, 2]`` -> canonical ``int32[M, C, 2F]``."""
+    packed = jnp.asarray(packed)
+    flat = packed.reshape(cfg.n_classes, cfg.n_clauses, cfg.n_literals)
+    return flat.astype(jnp.int32) + (cfg.n_states + 1)
+
+
+def packed_include_actions(packed: Array) -> Array:
+    """bool include mask straight off the packed representation
+    (``state > N`` is a sign test in the centered int8 domain)."""
+    return packed >= 0

@@ -1,0 +1,28 @@
+"""Naive oracle for the fused packed trainer: round-trip through the
+canonical representation and the reference summed-delta trainer.
+
+Deliberately does everything the fused kernel avoids — full unpack to
+``int32[M, C, 2F]``, dense clause evaluation, an ``[B, M, C, 2F]`` delta
+tensor — so a test that compares ``fused_train_batch`` against this is
+comparing two independently-structured computations that must agree
+bit-for-bit under the seeding contract.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ...core.tm import TMConfig
+from ...core.train import train_batch_parallel
+from .ops import pack_ta_state, unpack_ta_state
+
+Array = jax.Array
+
+
+def fused_train_batch_ref(
+    cfg: TMConfig, packed: Array, key: Array, xb: Array, yb: Array
+) -> Array:
+    """unpack -> ``train_batch_parallel`` -> repack (the slow truth)."""
+    state = unpack_ta_state(cfg, packed)
+    new = train_batch_parallel(cfg, state, key, xb, yb)
+    return pack_ta_state(cfg, new)

@@ -4,20 +4,35 @@ The low-power training node (``core.train``) and the runtime-tunable
 accelerator (``serve_tm``) were two endpoints; this package is the wire
 between them, run continuously under live traffic:
 
-  monitor.py     DriftMonitor — windowed accuracy / class-sum-margin
-                 statistics over served predictions; decides WHEN
-  worker.py      RecalWorker — incremental fold-in-seeded fine-tuning
-                 (``fit_step``), optional dist-mesh sharded step; produces
-                 the new TA state
-  compressor.py  Compressor — include-stream encoding with a bit-exact
-                 dense-oracle publication gate; produces WHAT ships
-  controller.py  RecalController — drain-then-swap publication through the
-                 serving registry, post-swap validation, auto-rollback
+  monitor.py        DriftMonitor — windowed accuracy / class-sum-margin
+                    statistics over served predictions; decides WHEN
+  train_engine.py   TrainEngine plugin registry — HOW one update runs
+                    ('reference' host path, 'packed' fused int8 kernel,
+                    'sharded' dist-mesh step; all bit-identical)
+  worker.py         RecalWorker — incremental fold-in-seeded fine-tuning
+                    through a TrainEngine; produces the new TA state
+  compressor.py     Compressor — include-stream encoding with a bit-exact
+                    dense-oracle publication gate; produces WHAT ships
+  controller.py     RecalController — drain-then-swap publication through
+                    the serving registry, post-swap validation,
+                    auto-rollback
 """
 
 from .compressor import CompressionReport, Compressor
 from .controller import RecalController, RecalEvent
 from .monitor import DriftDecision, DriftMonitor
+from .train_engine import (
+    TRAIN_ENGINES,
+    PackedTrainEngine,
+    ReferenceTrainEngine,
+    ShardedTrainEngine,
+    TrainEngine,
+    TrainEngineBase,
+    make_train_engine,
+    register_train_engine,
+    select_train_engine,
+    train_engine_names,
+)
 from .worker import RecalWorker
 
 __all__ = [
@@ -25,7 +40,17 @@ __all__ = [
     "Compressor",
     "DriftDecision",
     "DriftMonitor",
+    "PackedTrainEngine",
     "RecalController",
     "RecalEvent",
     "RecalWorker",
+    "ReferenceTrainEngine",
+    "ShardedTrainEngine",
+    "TRAIN_ENGINES",
+    "TrainEngine",
+    "TrainEngineBase",
+    "make_train_engine",
+    "register_train_engine",
+    "select_train_engine",
+    "train_engine_names",
 ]

@@ -1,17 +1,25 @@
 """The Fig-8 Model Training Node as a long-lived worker.
 
 Owns one (``TMConfig``, TA-state) pair and fine-tunes it incrementally on
-labelled batches via ``core.train.fit_step`` — every update is keyed by a
-monotone step counter under the fold-in seeding contract, so a worker can
-be checkpointed as the (key, step, state) triple and resumed bit-exactly.
+labelled batches — every update is keyed by a monotone step counter under
+the fold-in seeding contract, so a worker can be checkpointed as the
+(key, step, state) triple and resumed bit-exactly.
 
-For large class counts the per-step update can run as the ``dist``-mesh
-sharded feedback step (``dist.steps.make_tm_train_step``: classes over
-``model``, batch over the data axes) — same contract, same bits.
+HOW each update runs is a ``TrainEngine`` plugin (``train_engine.py``):
+the worker holds the engine's internal state representation (int8 for the
+fused 'packed' engine) and converts to/from the canonical ``int32[M, C,
+2F]`` tensor only at the ``state``/``snapshot`` boundary.  Because every
+registered engine is bit-identical, the backend is a pure speed knob —
+checkpoints and the step counter transfer across engines unchanged.
+
+The old ``RecalWorker(cfg, mesh=..., sharded_batch=...)`` construction
+still works (it maps onto the 'sharded' engine) but emits a
+``DeprecationWarning``, once per process.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -19,7 +27,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.tm import TMConfig, init_state
-from ..core.train import fit_step
+from .train_engine import TrainEngineBase, make_train_engine, select_train_engine
+
+_warned_legacy_sharded = False
+
+
+def _warn_legacy_sharded() -> None:
+    global _warned_legacy_sharded
+    if _warned_legacy_sharded:
+        return
+    _warned_legacy_sharded = True
+    warnings.warn(
+        "RecalWorker(mesh=..., sharded_batch=...) is deprecated: pass "
+        "train_engine='sharded' with engine_options={'batch': ...} (or "
+        "just mesh=, which auto-selects the sharded engine)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 class RecalWorker:
@@ -29,26 +53,56 @@ class RecalWorker:
         state: Optional[jax.Array] = None,
         *,
         key: Optional[jax.Array] = None,
+        train_engine: "Optional[str | TrainEngineBase]" = None,
         mesh=None,
+        plan=None,
+        engine_options: Optional[dict] = None,
         sharded_batch: int = 0,
     ):
-        """``mesh`` + ``sharded_batch`` opt into the dist-mesh sharded
-        training step: batches of exactly ``sharded_batch`` rows run the
-        class-sharded ``make_tm_train_step`` (bit-identical to the local
-        path); other batch sizes fall back to the local ``fit_step``."""
+        """``train_engine`` names the backend ('reference', 'packed',
+        'sharded', or a built ``TrainEngineBase``); ``None`` auto-selects
+        the fastest engine eligible for (cfg, mesh) via
+        ``select_train_engine``.  ``engine_options`` are forwarded to the
+        plugin constructor verbatim; ``plan`` opts training batches into
+        the negotiated capacity envelope (``CapacityExceeded``).
+
+        ``sharded_batch`` is the deprecated pre-engine spelling of the
+        dist-mesh path; with ``mesh`` it maps to the 'sharded' engine
+        pinned at that batch size (and warns, once per process)."""
         self.cfg = cfg
         self.key = key if key is not None else jax.random.key(0)
-        self.state = state if state is not None else init_state(cfg, self.key)
+        options = dict(engine_options or {})
+        if sharded_batch:
+            _warn_legacy_sharded()
+            if mesh is not None and train_engine is None:
+                train_engine = "sharded"
+                options.setdefault("batch", int(sharded_batch))
+        if train_engine is None:
+            train_engine = select_train_engine(cfg, mesh=mesh)
+        self.engine = make_train_engine(
+            train_engine, cfg, mesh=mesh, plan=plan, **options
+        )
+        if state is None:
+            state = init_state(cfg, self.key)
+        self._internal = self.engine.prepare(state)
         self.step_count = 0
-        self._sharded_step = None
-        self._sharded_batch = 0
-        if mesh is not None and sharded_batch:
-            from ..dist.steps import make_tm_train_step
 
-            self._sharded_step = make_tm_train_step(
-                cfg, mesh, batch=sharded_batch
-            )
-            self._sharded_batch = sharded_batch
+    @property
+    def train_engine(self) -> str:
+        """Name of the active training backend plugin."""
+        return self.engine.name
+
+    # -- canonical-state boundary --------------------------------------------
+
+    @property
+    def state(self) -> jax.Array:
+        """Canonical ``int32[M, C, 2F]`` TA state (converted from the
+        engine's internal representation on access)."""
+        return self.engine.canonical(self._internal)
+
+    @state.setter
+    def state(self, value) -> None:
+        self._internal = self.engine.prepare(value)
 
     # -- training ------------------------------------------------------------
 
@@ -58,16 +112,9 @@ class RecalWorker:
         step = self.step_count
         xb = jnp.asarray(np.asarray(xb, np.uint8))
         yb = jnp.asarray(np.asarray(yb, np.int32))
-        if self._sharded_step is not None and xb.shape[0] == self._sharded_batch:
-            # same bits as the local path: fold_in(key, step) is the call
-            # key, global sample i trains under fold_in(call_key, i)
-            kb = jax.random.fold_in(self.key, step)
-            self.state = self._sharded_step(self.state, kb, xb, yb)
-        else:
-            self.state = fit_step(
-                self.cfg, self.state, self.key, xb, yb,
-                step=step, parallel=True,
-            )
+        self._internal = self.engine.fit_step(
+            self._internal, self.key, xb, yb, step=step
+        )
         self.step_count += 1
         return step
 
@@ -95,9 +142,9 @@ class RecalWorker:
     # -- snapshots (rollback support) ----------------------------------------
 
     def snapshot(self) -> np.ndarray:
-        """Host copy of the TA state (restore() it to undo fine-tuning —
-        note train steps DONATE the device state buffer, so the device
-        array itself must not be aliased across steps)."""
+        """Host copy of the canonical TA state (restore() it to undo
+        fine-tuning — note train steps DONATE the internal state buffer,
+        so the device array itself must not be aliased across steps)."""
         return np.asarray(self.state)
 
     def restore(self, snap: np.ndarray) -> None:
