@@ -191,11 +191,16 @@ def _fleet_schema(data: dict):
 
     The pool sweep must be a non-empty bit-exact 1/2/4 scan, the
     mid-traffic rollout must complete all three stages with ZERO dropped
-    and zero incorrect requests, and the canary-failure scenario must
-    abort at the canary and leave the fleet consistent on the old
-    checksum.  Full-mode runs additionally gate the scaling claim
-    (4-node aggregate >= 2x 1-node); tiny CI runs skip that one check —
-    a shared runner's relative engine speeds are not the claim."""
+    and zero incorrect requests, the canary-failure scenario must abort
+    at the canary and leave the fleet consistent on the old checksum,
+    and the chaos scenario (one of four nodes killed mid-traffic under
+    injected faults) must lose ZERO critical requests, quarantine the
+    dead node within the circuit-breaker threshold window, and recover
+    it through a half-open probe after revival — with every per-node
+    health dict carrying the full schema.  Full-mode runs additionally
+    gate the scaling claim (4-node aggregate >= 2x 1-node); tiny CI runs
+    skip that one check — a shared runner's relative engine speeds are
+    not the claim."""
     errs = []
     sweep = data.get("pool_sweep")
     if not isinstance(sweep, dict) or not sweep.get("points"):
@@ -247,6 +252,53 @@ def _fleet_schema(data: dict):
                         "after the aborted rollout")
         if cf.get("rollback_provenance_ok") is not True:
             errs.append("rollback provenance missing on rolled-back nodes")
+    ch = data.get("chaos")
+    if not isinstance(ch, dict):
+        errs.append("missing 'chaos' scenario")
+    else:
+        if ch.get("critical_lost") != 0:
+            errs.append(
+                f"chaos lost {ch.get('critical_lost')} critical requests "
+                f"(must be 0)"
+            )
+        if ch.get("critical_incorrect") != 0:
+            errs.append(
+                f"chaos served {ch.get('critical_incorrect')} incorrect "
+                f"critical replies (must be 0 — retried/failed-over "
+                f"requests must stay bit-exact)"
+            )
+        if ch.get("unresolved_handles") != 0:
+            errs.append(
+                f"chaos left {ch.get('unresolved_handles')} handles "
+                f"unresolved (every issued handle must reach a terminal "
+                f"state)"
+            )
+        if ch.get("quarantined") is not True:
+            errs.append("chaos never quarantined the killed node")
+        if ch.get("quarantine_within_threshold") is not True:
+            errs.append(
+                "chaos quarantine took more consecutive failures than the "
+                "circuit-breaker threshold allows"
+            )
+        if ch.get("recovered") is not True:
+            errs.append("killed node did not recover through a half-open "
+                        "probe after revival")
+        health = ch.get("health")
+        if not isinstance(health, dict) or not health:
+            errs.append("chaos.health must be a non-empty object")
+        else:
+            for node, d in health.items():
+                if not isinstance(d, dict):
+                    errs.append(f"chaos.health.{node} must be an object")
+                    continue
+                missing = [k for k in SCHEMA.HEALTH_NODE_KEYS if k not in d]
+                if missing:
+                    errs.append(f"chaos.health.{node} missing {missing}")
+                if d.get("state") not in SCHEMA.HEALTH_STATES:
+                    errs.append(
+                        f"chaos.health.{node}.state {d.get('state')!r} not "
+                        f"in {list(SCHEMA.HEALTH_STATES)}"
+                    )
     return errs
 
 

@@ -1,6 +1,6 @@
 """Fleet benchmark: routed replica pools + canary artifact rollouts.
 
-Three scenarios, emitted to ``BENCH_tm_fleet.json`` (CWD) plus harness
+Four scenarios, emitted to ``BENCH_tm_fleet.json`` (CWD) plus harness
 CSV rows:
 
   * **pool sweep** — the same workload routed over pools of 1 / 2 / 4
@@ -18,6 +18,15 @@ CSV rows:
   * **canary failure** — a bad artifact dies at the canary's accuracy
     gate and the WHOLE fleet rolls back: every node must end on the old
     checksum with rollback provenance.
+  * **chaos** — a 4-node pool of ``ChaosNode``-wrapped servers (seeded
+    injected errors, latency, ``Overloaded`` storms, hung handles) with
+    mixed-priority traffic; ONE node is killed mid-traffic and later
+    revived.  The gates, asserted in-bench and schema-gated by
+    ``check_regression.py``: ZERO critical-lane requests lost or
+    incorrect (every handle resolves with a bit-exact prediction or a
+    structured error — none block forever), the dead node quarantined
+    within the consecutive-failure threshold, and the fleet recovered
+    through the half-open probe after revival.
 
     PYTHONPATH=src python -m benchmarks.run --only tm_fleet
 
@@ -37,7 +46,15 @@ import numpy as np
 from repro.accel import CapacityPlan, TMProgram
 from repro.core import TMConfig, batch_class_sums, state_from_actions
 from repro.core.compress import encode
-from repro.fleet import FleetPool, RolloutAborted, RolloutManager, Router
+from repro.fleet import (
+    ChaosNode,
+    FleetHealth,
+    FleetPool,
+    RetryPolicy,
+    RolloutAborted,
+    RolloutManager,
+    Router,
+)
 from repro.serve_tm import TMServer
 
 OUT_PATH = "BENCH_tm_fleet.json"
@@ -56,10 +73,14 @@ def _random_model(rng, M, C, F, density=0.03):
     return cfg, acts, encode(cfg, acts)
 
 
-def _oracle_preds(cfg, acts, X) -> np.ndarray:
+def _oracle_sums(cfg, acts, X) -> np.ndarray:
     return np.asarray(
         batch_class_sums(cfg, state_from_actions(cfg, acts), jnp.asarray(X))
-    ).argmax(1).astype(np.int32)
+    )
+
+
+def _oracle_preds(cfg, acts, X) -> np.ndarray:
+    return _oracle_sums(cfg, acts, X).argmax(1).astype(np.int32)
 
 
 def _make_pool(n, capacity, slot, artifact, warm_features):
@@ -295,6 +316,216 @@ def _bench_canary_failure(capacity, tiny):
     }
 
 
+# -- scenario 4: chaos (kill a node mid-traffic) -----------------------------
+
+
+def _bench_chaos(capacity, tiny):
+    """Four ChaosNode-wrapped heterogeneous servers under mixed-priority
+    load; one node is killed mid-traffic and revived later.  The driver
+    resubmits critical requests on structured errors; the bench asserts
+    zero critical requests lost or incorrect, quarantine within the
+    consecutive-failure threshold, and half-open-probe recovery."""
+    rng = np.random.default_rng(19)
+    dims = (5, 12, 40) if tiny else (8, 16, 64)
+    cfg, acts, model = _random_model(rng, *dims)
+    art = TMProgram(capacity=capacity, model=model)
+    victim = "n1"
+
+    pool = FleetPool()
+    chaos = {}
+    for i in range(4):
+        name = f"n{i}"
+        inner = TMServer(capacity, engine=ENGINE_CYCLE[i])
+        inner.register("edge", art)
+        inner.class_sums("edge", np.zeros((1, cfg.n_features), np.uint8))
+        node = ChaosNode(
+            inner, name=name, seed=100 + i,
+            error_rate=0.03, latency_rate=0.04, latency_s=0.0005,
+            overload_rate=0.02,
+            # only the victim hangs: its kill() resolves the hung handles
+            # (a hang on a node that never dies would block forever BY
+            # DESIGN — that pathology is exercised in the unit tests)
+            hang_rate=0.05 if name == victim else 0.0,
+        )
+        chaos[name] = node
+        pool.add(name, node)
+    consecutive_threshold = 3
+    health = FleetHealth(
+        pool=pool,
+        consecutive_failures=consecutive_threshold,
+        probe_after_s=0.05,
+        heartbeat_timeout_s=600.0,  # the breaker, not the sweep, quarantines
+    )
+    router = Router(pool, health=health, retry=RetryPolicy(
+        max_attempts=6, backoff_base_s=0.002, backoff_max_s=0.02,
+    ))
+
+    n_critical = 24 if tiny else 96
+    kill_at, revive_at = n_critical // 3, (2 * n_critical) // 3
+    rows = max(2, capacity.batch_capacity // 4)
+    blocks = [
+        rng.integers(0, 2, (rows, cfg.n_features)).astype(np.uint8)
+        for _ in range(8)
+    ]
+    oracle = [
+        (_oracle_preds(cfg, acts, x), _oracle_sums(cfg, acts, x))
+        for x in blocks
+    ]
+    wait_s = 1.0 if tiny else 2.0
+
+    background = []  # handles from the load generator
+    stop = threading.Event()
+
+    def load():
+        i = 0
+        while not stop.is_set():
+            try:
+                background.append(
+                    router.submit("edge", blocks[i % len(blocks)],
+                                  priority="normal")
+                )
+            except Exception:
+                pass  # overload/exhausted retries: load is best-effort
+            i += 1
+            time.sleep(0.002 if tiny else 0.004)
+
+    counts = {
+        "lost": 0, "correct": 0, "incorrect": 0,
+        "resubmits": 0, "structured_errors": 0,
+    }
+    quarantine_seen_at = None
+    failures_at_quarantine = None
+    served_by_victim_after_revive = 0
+
+    def serve_critical(i):
+        x = blocks[i % len(blocks)]
+        want_preds, want_sums = oracle[i % len(blocks)]
+        for attempt in range(12):
+            if attempt:
+                counts["resubmits"] += 1
+            try:
+                h = router.submit("edge", x, priority="critical",
+                                  timeout_ms=2000.0)
+            except Exception:
+                counts["structured_errors"] += 1
+                time.sleep(0.002)
+                continue
+            try:
+                preds = h.wait(timeout=wait_s)
+            except TimeoutError:
+                continue  # hung handle: the retry budget moves on
+            except Exception:
+                counts["structured_errors"] += 1
+                continue
+            ok = (
+                np.array_equal(preds, want_preds)
+                and np.array_equal(np.asarray(h.class_sums), want_sums)
+            )
+            if ok and i >= revive_at and h.routed_to == victim:
+                nonlocal_served[0] += 1
+            return ok
+        return None  # lost: every retry exhausted
+
+    nonlocal_served = [0]
+    pool.start_all()
+    t_thread = threading.Thread(target=load, daemon=True)
+    t0 = time.perf_counter()
+    try:
+        t_thread.start()
+        for i in range(n_critical):
+            if i == kill_at:
+                chaos[victim].kill()
+            if i == revive_at:
+                chaos[victim].revive()
+                chaos[victim].rates["hang"] = 0.0  # no unkillable hangs
+                time.sleep(health.probe_after_s + 0.02)  # cooldown elapses
+            ok = serve_critical(i)
+            if ok is True:
+                counts["correct"] += 1
+            elif ok is False:
+                counts["incorrect"] += 1
+            else:
+                counts["lost"] += 1
+            if (
+                quarantine_seen_at is None
+                and health.state(victim) == "quarantined"
+            ):
+                quarantine_seen_at = i
+                failures_at_quarantine = (
+                    health.summary()[victim]["consecutive_failures"]
+                )
+    finally:
+        stop.set()
+        t_thread.join(timeout=30.0)
+        for h in background:  # everything admitted must reach a terminal
+            try:
+                h.wait(timeout=300.0)
+            except Exception:
+                pass
+        pool.stop_all()
+    elapsed_s = time.perf_counter() - t0
+    served_by_victim_after_revive = nonlocal_served[0]
+
+    unresolved = sum(
+        1 for h in background if h.status == "pending"
+    )
+    summary = health.summary()
+    vict = summary[victim]
+    quarantined = quarantine_seen_at is not None
+    within_threshold = (
+        quarantined
+        and failures_at_quarantine is not None
+        and failures_at_quarantine <= consecutive_threshold
+    )
+    # recovery = the breaker reopened the node via a half-open probe and
+    # it is routable again.  "degraded" counts: a straggler-suspect
+    # verdict on a recent (fault-injected) latency spike is orthogonal
+    # to the quarantine/probe cycle under test.
+    recovered = (
+        vict["probes"] >= 1
+        and vict["state"] not in ("quarantined", "half_open")
+    )
+    fleet_metrics = pool.metrics_summary()["aggregate"]
+
+    # the acceptance gates, asserted here AND schema-gated in CI
+    assert counts["lost"] == 0, f"critical requests lost: {counts}"
+    assert counts["incorrect"] == 0, f"critical mismatches: {counts}"
+    assert unresolved == 0, f"{unresolved} handles never reached terminal"
+    assert quarantined, f"victim never quarantined: {vict}"
+    assert within_threshold, (
+        f"quarantine took {failures_at_quarantine} consecutive failures "
+        f"(threshold {consecutive_threshold})"
+    )
+    assert recovered, f"victim not recovered via half-open probe: {vict}"
+
+    return {
+        "nodes": 4,
+        "killed": victim,
+        "killed_at_request": kill_at,
+        "revived_at_request": revive_at,
+        "critical_requests": n_critical,
+        "critical_lost": counts["lost"],
+        "critical_incorrect": counts["incorrect"],
+        "critical_correct": counts["correct"],
+        "critical_resubmits": counts["resubmits"],
+        "structured_errors": counts["structured_errors"],
+        "unresolved_handles": unresolved,
+        "background_requests": len(background),
+        "quarantined": quarantined,
+        "quarantine_seen_at_request": quarantine_seen_at,
+        "failures_at_quarantine": failures_at_quarantine,
+        "quarantine_within_threshold": within_threshold,
+        "recovered": recovered,
+        "served_by_killed_after_revive": served_by_victim_after_revive,
+        "fleet_retries": fleet_metrics["retries"],
+        "fleet_failovers": fleet_metrics["failovers"],
+        "fleet_quarantines": fleet_metrics["quarantines"],
+        "fleet_probes": fleet_metrics["probes"],
+        "health": summary,
+        "elapsed_ms": elapsed_s * 1e3,
+    }
+
+
 def run():
     tiny = _tiny()
     capacity = CapacityPlan(
@@ -308,6 +539,7 @@ def run():
     sweep = _bench_pool_sweep(capacity, tiny)
     rollout = _bench_rollout_under_traffic(capacity, tiny)
     canary = _bench_canary_failure(capacity, tiny)
+    chaos = _bench_chaos(capacity, tiny)
     report = {
         "bench": "tm_fleet",
         "tiny": tiny,
@@ -319,6 +551,7 @@ def run():
         "pool_sweep": sweep,
         "rollout_under_traffic": rollout,
         "canary_failure": canary,
+        "chaos": chaos,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=1)
@@ -348,5 +581,14 @@ def run():
         f";stage={canary['failed_stage']}"
         f";consistent={int(canary['fleet_consistent_on_old'])}"
         f";prov_ok={int(canary['rollback_provenance_ok'])}",
+    ))
+    rows.append((
+        "tm_fleet_chaos",
+        f"{chaos['elapsed_ms'] * 1e3:.0f}",
+        f"lost={chaos['critical_lost']}"
+        f";resub={chaos['critical_resubmits']}"
+        f";quar={int(chaos['quarantined'])}"
+        f";rec={int(chaos['recovered'])}"
+        f";failover={chaos['fleet_failovers']}",
     ))
     return rows

@@ -46,8 +46,8 @@ from .facade import Accelerator
 # (Submodule imports only — safe against either package initializing
 # first; serve_tm's own init imports accel submodules the same way.)
 from ..serve_tm.batching import DeadlineExceeded
-from ..serve_tm.node import ServingNode
-from ..serve_tm.scheduler import Overloaded
+from ..serve_tm.node import NodeDown, ServingNode
+from ..serve_tm.scheduler import EngineFault, Overloaded
 
 __all__ = [
     "Accelerator",
@@ -57,9 +57,11 @@ __all__ = [
     "ENGINES",
     "Engine",
     "EngineBase",
+    "EngineFault",
     "FORMAT_VERSION",
     "HEADROOM_KNOBS",
     "InterpEngine",
+    "NodeDown",
     "Overloaded",
     "PlanEngine",
     "PopcountEngine",

@@ -6,19 +6,37 @@ anything that satisfies the protocol — a ``TMServer``, the
 and the fleet machinery never reaches past the boundary into a node's
 registry, engine or scheduler.
 
-  pool.py      FleetPool — named membership, whole-fleet lifecycle,
-               capacity-validated slot deploys, aggregate metrics rollup
+  pool.py      FleetPool — named membership, whole-fleet lifecycle
+               (dead-node tolerant teardown), capacity-validated slot
+               deploys, aggregate metrics rollup
   router.py    Router — capacity-fit + least-queue-depth routing with
-               PR-6 priority/deadline semantics, Overloaded failover and
-               hot-slot replication; structured NoEligibleNode
+               PR-6 priority/deadline semantics, health-gated candidates,
+               retry/backoff failover on Overloaded / engine exceptions /
+               NodeDown, hot-slot replication; structured NoEligibleNode
+  health.py    FleetHealth — per-node circuit breaker (healthy →
+               degraded → quarantined → half-open probe → healthy) over
+               runtime_ft.supervisor's heartbeat/straggler trackers;
+               RetryPolicy — bounded attempts, exponential backoff,
+               hard deadline budget
+  chaos.py     ChaosNode — deterministic seeded fault injection at the
+               ServingNode boundary (errors, latency, Overloaded storms,
+               hung handles, NodeDown, corrupted artifacts)
   rollout.py   RolloutManager — canary → wave → fleet-wide TMProgram
                shipping, gated per stage on installed checksum, served
                bit-exactness and holdout accuracy, with fleet-wide
                rollback (structured RolloutAborted carrying the
-               RolloutReport)
+               RolloutReport); mid-wave node death is a gate failure,
+               rollback completes on the reachable nodes
+
+The structured exceptions ``NodeDown`` and ``EngineFault`` are stable
+exports here and on ``repro.serve_tm`` (same objects, per the PR-7
+convention).
 """
 
-from ..serve_tm.node import ServingNode
+from ..serve_tm.node import NodeDown, ServingNode
+from ..serve_tm.scheduler import EngineFault
+from .chaos import ChaosNode
+from .health import FleetHealth, RetryPolicy
 from .pool import FleetPool
 from .rollout import (
     RolloutAborted,
@@ -30,8 +48,13 @@ from .rollout import (
 from .router import NoEligibleNode, Router
 
 __all__ = [
+    "ChaosNode",
+    "EngineFault",
+    "FleetHealth",
     "FleetPool",
     "NoEligibleNode",
+    "NodeDown",
+    "RetryPolicy",
     "RolloutAborted",
     "RolloutManager",
     "RolloutReport",

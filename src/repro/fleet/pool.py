@@ -21,11 +21,14 @@ misfitting node instead of half-deploying).
 
 from __future__ import annotations
 
+import logging
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from ..accel.capacity import CapacityExceeded
 from ..serve_tm.metrics import ServeMetrics
 from ..serve_tm.node import ServingNode
+
+logger = logging.getLogger(__name__)
 
 
 def _validate_for_node(node, model, name: str, action: str) -> None:
@@ -49,6 +52,9 @@ class FleetPool:
 
     def __init__(self, nodes: Optional[Dict[str, ServingNode]] = None):
         self._nodes: Dict[str, ServingNode] = {}
+        # drain/stop failures on dead nodes downgrade to entries here —
+        # teardown always completes, operators read what it swallowed
+        self.warnings: List[str] = []
         for name, node in (nodes or {}).items():
             self.add(name, node)
 
@@ -70,12 +76,24 @@ class FleetPool:
 
     def remove(self, name: str, *, drain: bool = True) -> ServingNode:
         """Leave the pool; by default the node's loop is stopped and its
-        queued traffic drained first so nothing admitted is stranded."""
+        queued traffic drained first so nothing admitted is stranded.
+        A DEAD node (stop raises) is still removed: the failure becomes
+        a recorded warning, never a stuck membership entry."""
         node = self.node(name)
         if drain:
-            node.stop(drain=True)
+            try:
+                node.stop(drain=True)
+            except Exception as e:
+                self._warn(
+                    f"removing node {name!r}: drain/stop failed "
+                    f"({type(e).__name__}: {e}); detaching it anyway"
+                )
         del self._nodes[name]
         return node
+
+    def _warn(self, message: str) -> None:
+        self.warnings.append(message)
+        logger.warning("%s", message)
 
     def node(self, name: str) -> ServingNode:
         if name not in self._nodes:
@@ -109,18 +127,30 @@ class FleetPool:
             node.start()
 
     def stop_all(self, drain: bool = True) -> None:
-        for node in self._nodes.values():
-            node.stop(drain=drain)
+        """Stop every node; dead nodes downgrade to recorded warnings so
+        fleet teardown always completes."""
+        for name, node in self._nodes.items():
+            try:
+                node.stop(drain=drain)
+            except Exception as e:
+                self._warn(
+                    f"stop_all: node {name!r} failed to stop "
+                    f"({type(e).__name__}: {e}); continuing teardown"
+                )
 
     # -- slot placement ------------------------------------------------------
 
     def nodes_with_slot(self, slot: str) -> List[Tuple[str, ServingNode]]:
         """Members currently hosting ``slot`` (the router's candidates),
-        in join order."""
-        return [
-            (name, node) for name, node in self._nodes.items()
-            if slot in node.slots()
-        ]
+        in join order; nodes that cannot answer (dead) are skipped."""
+        hosting = []
+        for name, node in self._nodes.items():
+            try:
+                if slot in node.slots():
+                    hosting.append((name, node))
+            except Exception:
+                continue  # unreachable — it can't serve the slot anyway
+        return hosting
 
     def install(
         self,
@@ -154,23 +184,32 @@ class FleetPool:
     # -- fleet introspection -------------------------------------------------
 
     def queue_depths(self, slot: Optional[str] = None) -> Dict[str, int]:
-        """Per-node pending rows (the router's load signal)."""
-        return {
-            name: node.queue_depth(slot)
-            for name, node in self._nodes.items()
-        }
+        """Per-node pending rows (the router's load signal); nodes that
+        cannot answer (dead) are omitted."""
+        depths = {}
+        for name, node in self._nodes.items():
+            try:
+                depths[name] = node.queue_depth(slot)
+            except Exception:
+                continue
+        return depths
 
     def metrics_summary(self) -> Dict:
-        """``{"aggregate": <fleet rollup>, "nodes": {name: snapshot}}`` —
-        per-node ``metrics_snapshot()`` dicts plus the
-        ``ServeMetrics.aggregate`` rollup (schema: serve_tm/schema.py)."""
-        snaps = {
-            name: node.metrics_snapshot()
-            for name, node in self._nodes.items()
-        }
+        """``{"aggregate": <fleet rollup>, "nodes": {name: snapshot},
+        "unreachable": [names]}`` — per-node ``metrics_snapshot()`` dicts
+        plus the ``ServeMetrics.aggregate`` rollup (schema:
+        serve_tm/schema.py); the rollup covers the nodes that answered."""
+        snaps: Dict[str, Dict] = {}
+        unreachable: List[str] = []
+        for name, node in self._nodes.items():
+            try:
+                snaps[name] = node.metrics_snapshot()
+            except Exception:
+                unreachable.append(name)
         return {
             "aggregate": ServeMetrics.aggregate(list(snaps.values())),
             "nodes": snaps,
+            "unreachable": unreachable,
         }
 
     def __repr__(self) -> str:

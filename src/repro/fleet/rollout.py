@@ -28,6 +28,14 @@ the structured ``RolloutAborted`` carries the full ``RolloutReport``.
 In-flight traffic is never dropped: installs and rollbacks hold each
 node's scheduler lock across drain + install, exactly like a single-node
 hot-swap.
+
+Failure-aware: a node that dies mid-wave — raising out of its install,
+its gate, or the retreat's rollback — is treated as a GATE FAILURE, not
+a crash of the rollout itself.  The dead node is quarantined (when the
+manager shares the router's ``FleetHealth``), the rollback still
+completes on every reachable node, and ``RolloutReport.unreachable``
+records who kept the attempted artifact so an operator can reconcile
+when the node returns.
 """
 
 from __future__ import annotations
@@ -35,19 +43,41 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..accel.program import TMProgram
+from .health import FleetHealth
 from .pool import FleetPool, _validate_for_node
 from .router import NoEligibleNode
 
 # how long a gate waits for the node to serve the holdout block (a live
 # scheduler loop completes it; without one the rollout drives flush())
-GATE_TIMEOUT_S = 120.0
+_DEFAULT_GATE_TIMEOUT_S = 120.0
 
 STAGES = ("canary", "wave", "fleet")
+
+_GATE_TIMEOUT_WARNED = False
+
+
+def __getattr__(name: str):
+    # deprecated module constant: the timeout is a RolloutManager knob
+    # now (gate_timeout_s=), per the once-per-process warning pattern
+    if name == "GATE_TIMEOUT_S":
+        global _GATE_TIMEOUT_WARNED
+        if not _GATE_TIMEOUT_WARNED:
+            _GATE_TIMEOUT_WARNED = True
+            warnings.warn(
+                "fleet.rollout.GATE_TIMEOUT_S is deprecated: pass "
+                "RolloutManager(..., gate_timeout_s=...) instead — the "
+                "module constant is no longer consulted at run time",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        return _DEFAULT_GATE_TIMEOUT_S
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +106,10 @@ class RolloutReport:
     failed_stage: Optional[str] = None
     failure_reason: Optional[str] = None
     rolled_back: Tuple[str, ...] = ()
+    # nodes the retreat could NOT reach (dead mid-rollout): they keep the
+    # attempted artifact until they come back; the health layer
+    # quarantines them so no traffic routes there meanwhile
+    unreachable: Tuple[str, ...] = ()
     baseline_accuracy: Optional[float] = None
     provenance: Dict[str, str] = dataclasses.field(default_factory=dict)
 
@@ -115,8 +149,25 @@ def plan_stages(names: List[str]) -> List[Tuple[str, List[str]]]:
 
 
 class RolloutManager:
-    def __init__(self, pool: FleetPool):
+    def __init__(
+        self,
+        pool: FleetPool,
+        *,
+        health: Optional[FleetHealth] = None,
+        gate_timeout_s: float = _DEFAULT_GATE_TIMEOUT_S,
+    ):
         self.pool = pool
+        # share the ROUTER's FleetHealth so a node this rollout finds
+        # dead is quarantined for traffic too, not just for rollouts
+        self.health = health
+        self.gate_timeout_s = gate_timeout_s
+
+    def _quarantine(self, name: str, exc: BaseException) -> None:
+        if self.health is not None:
+            self.health.record_failure(name, exc)
+            self.health.quarantine(
+                name, reason=f"died mid-rollout: {type(exc).__name__}: {exc}"
+            )
 
     def rollout(
         self,
@@ -180,11 +231,26 @@ class RolloutManager:
         for stage, stage_names in plan_stages(names):
             t0 = time.perf_counter()
             versions = {}
+            reason = None
             for name in stage_names:
-                entry = by_name[name].register(
-                    slot, artifact,
-                    provenance=f"rollout:{stage}:{artifact.checksum:08x}",
-                )
+                try:
+                    entry = by_name[name].register(
+                        slot, artifact,
+                        provenance=(
+                            f"rollout:{stage}:{artifact.checksum:08x}"
+                        ),
+                    )
+                except Exception as e:
+                    # a node dying (or rejecting corrupted wire bytes)
+                    # mid-install is a GATE FAILURE, not an exception out
+                    # of the loop: quarantine it, abort, roll back the
+                    # reachable nodes
+                    reason = (
+                        f"node {name!r} ({stage}) failed install: "
+                        f"{type(e).__name__}: {e}"
+                    )
+                    self._quarantine(name, e)
+                    break
                 installed.append(name)
                 versions[name] = entry.version
             install_s = time.perf_counter() - t0
@@ -192,46 +258,58 @@ class RolloutManager:
             t0 = time.perf_counter()
             checksum_ok = bit_exact = True
             accuracy: Optional[float] = None
-            reason = None
-            for name in stage_names:
-                node = by_name[name]
-                if node.installed_checksum(slot) != artifact.checksum:
-                    checksum_ok = False
-                    reason = (
-                        f"node {name!r} reports checksum "
-                        f"{node.installed_checksum(slot)!r}, shipped "
-                        f"{artifact.checksum:#x}"
-                    )
-                    break
-                # gate on the REAL served path, not the oracle hook: a
-                # live loop completes the handle, otherwise flush drives
-                handle = node.submit(slot, holdout_x)
-                if node.scheduler_running:
-                    preds = handle.wait(timeout=GATE_TIMEOUT_S)
-                else:
-                    node.flush()
-                    preds = handle.result()
-                sums = handle.class_sums
-                if reference is None:
-                    reference = np.asarray(sums)
-                elif not np.array_equal(np.asarray(sums), reference):
-                    bit_exact = False
-                    reason = (
-                        f"node {name!r} ({stage}) diverged from the "
-                        f"canary's class sums — engines are no longer "
-                        f"bit-exact"
-                    )
-                    break
-                if holdout_y is not None:
-                    acc = float((preds == holdout_y).mean())
-                    accuracy = acc if accuracy is None else min(accuracy,
-                                                                acc)
-                    if floor is not None and acc < floor:
+            if reason is None:
+                for name in stage_names:
+                    node = by_name[name]
+                    try:
+                        if node.installed_checksum(slot) != artifact.checksum:
+                            checksum_ok = False
+                            reason = (
+                                f"node {name!r} reports checksum "
+                                f"{node.installed_checksum(slot)!r}, shipped "
+                                f"{artifact.checksum:#x}"
+                            )
+                            break
+                        # gate on the REAL served path, not the oracle
+                        # hook: a live loop completes the handle,
+                        # otherwise flush drives
+                        handle = node.submit(slot, holdout_x)
+                        if node.scheduler_running:
+                            preds = handle.wait(timeout=self.gate_timeout_s)
+                        else:
+                            node.flush()
+                            preds = handle.result()
+                        sums = handle.class_sums
+                    except Exception as e:
+                        # node died mid-gate (NodeDown, a failed handle,
+                        # a gate timeout): same treatment as any failed
+                        # gate, plus quarantine
                         reason = (
-                            f"node {name!r} ({stage}) holdout accuracy "
-                            f"{acc:.3f} under the gate floor {floor:.3f}"
+                            f"node {name!r} ({stage}) died during the "
+                            f"gate: {type(e).__name__}: {e}"
+                        )
+                        self._quarantine(name, e)
+                        break
+                    if reference is None:
+                        reference = np.asarray(sums)
+                    elif not np.array_equal(np.asarray(sums), reference):
+                        bit_exact = False
+                        reason = (
+                            f"node {name!r} ({stage}) diverged from the "
+                            f"canary's class sums — engines are no longer "
+                            f"bit-exact"
                         )
                         break
+                    if holdout_y is not None:
+                        acc = float((preds == holdout_y).mean())
+                        accuracy = acc if accuracy is None else min(accuracy,
+                                                                    acc)
+                        if floor is not None and acc < floor:
+                            reason = (
+                                f"node {name!r} ({stage}) holdout accuracy "
+                                f"{acc:.3f} under the gate floor {floor:.3f}"
+                            )
+                            break
             verify_s = time.perf_counter() - t0
             passed = reason is None
             report.stages.append(StageReport(
@@ -244,27 +322,44 @@ class RolloutManager:
                 self._abort(report, stage, reason, installed, by_name,
                             slot)
         report.completed = True
-        report.provenance = {
-            name: by_name[name].registry.get(slot).provenance
-            if hasattr(by_name[name], "registry") else ""
-            for name in installed
-        }
+        report.provenance = self._provenance(installed, by_name, slot)
         return report
 
     def _abort(self, report, stage, reason, installed, by_name, slot):
         """The fleet-wide retreat: roll back every node this rollout
         touched (drain-then-swap, provenance chains nest the attempt),
-        then raise the structured ``RolloutAborted``."""
+        then raise the structured ``RolloutAborted``.  A node the
+        retreat cannot reach (died after install) is recorded in
+        ``report.unreachable`` and quarantined — the rollback COMPLETES
+        on every reachable node instead of raising out half-rolled-back."""
         rolled = []
+        unreachable = []
         for name in installed:
-            by_name[name].rollback(slot)
-            rolled.append(name)
+            try:
+                by_name[name].rollback(slot)
+                rolled.append(name)
+            except Exception as e:
+                unreachable.append(name)
+                self._quarantine(name, e)
         report.failed_stage = stage
         report.failure_reason = reason
         report.rolled_back = tuple(rolled)
-        report.provenance = {
-            name: by_name[name].registry.get(slot).provenance
-            if hasattr(by_name[name], "registry") else ""
-            for name in rolled
-        }
+        report.unreachable = tuple(unreachable)
+        report.provenance = self._provenance(rolled, by_name, slot)
         raise RolloutAborted(report)
+
+    @staticmethod
+    def _provenance(names, by_name, slot) -> Dict[str, str]:
+        """Per-node provenance audit strings, skipping nodes that cannot
+        answer (the registry is an optional, best-effort window)."""
+        out: Dict[str, str] = {}
+        for name in names:
+            try:
+                node = by_name[name]
+                out[name] = (
+                    node.registry.get(slot).provenance
+                    if hasattr(node, "registry") else ""
+                )
+            except Exception:
+                out[name] = ""
+        return out

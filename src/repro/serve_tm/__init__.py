@@ -25,7 +25,9 @@ registry); this package is the serving machinery on top of it:
 The structured exceptions are stable public API here and on
 ``repro.accel``: ``Overloaded`` (admission control), ``DeadlineExceeded``
 (a shed request), ``CapacityExceeded`` (a model that doesn't fit the
-synthesis-time envelope).
+synthesis-time envelope), ``EngineFault`` (a batch body that raised,
+failing its requests) and ``NodeDown`` (a node that stopped responding;
+``repro.fleet`` raises and routes around it).
 
 The legacy executor names below are re-exported from ``repro.accel``
 directly (NOT via the shim) so importing this package stays silent;
@@ -50,9 +52,9 @@ from .batching import (
     RequestHandle,
 )
 from .metrics import ServeMetrics
-from .node import ServingNode
+from .node import NodeDown, ServingNode
 from .registry import ModelRegistry, SlotEntry
-from .scheduler import Overloaded, Scheduler
+from .scheduler import EngineFault, Overloaded, Scheduler
 from .server import TMServer
 
 __all__ = [
@@ -60,8 +62,10 @@ __all__ = [
     "Batcher",
     "CapacityExceeded",
     "DeadlineExceeded",
+    "EngineFault",
     "InterpExecutor",
     "ModelRegistry",
+    "NodeDown",
     "Overloaded",
     "PRIORITIES",
     "PlanExecutor",

@@ -65,8 +65,11 @@ class DeadlineExceeded(RuntimeError):
 class RequestHandle:
     """Per-request future: filled row-by-row as engine batches complete.
 
-    Terminal states: ``done`` (all rows served) or ``expired`` (the
-    scheduler shed it past its deadline).  ``driver`` records who owns
+    Terminal states: ``done`` (all rows served), ``expired`` (the
+    scheduler shed it past its deadline) or ``failed`` (the batch body
+    raised, or the node serving it died — ``error`` carries the
+    structured exception and ``result()``/``wait()``/``async_result()``
+    re-raise it).  ``driver`` records who owns
     completion — ``"flush"`` (the caller-driven sync path) or
     ``"scheduler"`` (a running continuous-batching loop) — so the
     pending-result error can say what to actually do.
@@ -96,6 +99,8 @@ class RequestHandle:
         self.dequeued_at: Optional[float] = None  # first rows entered a batch
         self.completed_at: Optional[float] = None
         self.expired_at: Optional[float] = None
+        self.failed_at: Optional[float] = None
+        self.error: Optional[BaseException] = None
         self._filled = 0
         self._lock = threading.Lock()
         self._terminal_evt = threading.Event()
@@ -111,7 +116,13 @@ class RequestHandle:
         return self.expired_at is not None
 
     @property
+    def failed(self) -> bool:
+        return self.error is not None
+
+    @property
     def status(self) -> str:
+        if self.failed:
+            return "failed"
         if self.expired:
             return "expired"
         return "done" if self.done else "pending"
@@ -139,6 +150,8 @@ class RequestHandle:
         )
 
     def result(self) -> np.ndarray:
+        if self.failed:
+            raise self.error
         if self.expired:
             raise DeadlineExceeded(
                 self.rid, self.slot, self.priority, self.deadline
@@ -212,6 +225,15 @@ class RequestHandle:
 
     def _expire(self, now: float) -> None:
         self.expired_at = now
+        self._signal_terminal()
+
+    def _fail(self, exc: BaseException, now: Optional[float] = None) -> None:
+        """Terminal failure: the batch body raised or the serving node
+        died.  Waiters unblock and re-raise ``exc`` from ``result()``."""
+        if self._terminal_evt.is_set():
+            return  # already terminal — never overwrite a served result
+        self.error = exc
+        self.failed_at = time.perf_counter() if now is None else now
         self._signal_terminal()
 
 

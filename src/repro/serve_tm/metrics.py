@@ -19,6 +19,10 @@ docs/accel.md table are all held to):
   engine_us / request_latency_us / swap_us      {p50, p95, p99}
   recals, rollbacks, recal_*_s                  Fig-8 loop counters
   sheds, admission_rejects, deadline_misses     totals across lanes
+  retries, failovers, quarantines, probes       fleet health/retry path
+                                                (a router records them on
+                                                the node that finally
+                                                served the request)
   lanes.<lane>.completed|shed|rejected|deadline_miss    int counters
   lanes.<lane>.queue_delay_us|latency_us        {p50, p99}
   lanes.<lane>.slo_attainment                   completed-in-deadline /
@@ -66,6 +70,12 @@ class ServeMetrics:
         self.swaps = 0
         self.recals = 0          # completed recalibration pipeline runs
         self.rollbacks = 0       # post-swap validation failures
+        # fleet health/retry path (recorded by a fleet.Router, on the
+        # node that finally served the request)
+        self.retries = 0         # requests served only after backoff
+        self.failovers = 0       # requests served after another node failed
+        self.quarantines = 0     # circuit-breaker opened on this node
+        self.probes = 0          # half-open probes admitted to this node
         self.engine_s: List[float] = []
         self.request_latency_s: List[float] = []
         self.swap_s: List[float] = []
@@ -131,6 +141,22 @@ class ServeMetrics:
     def record_rollback(self) -> None:
         self.rollbacks += 1
 
+    def record_retry(self) -> None:
+        """A request landed here only after at least one backoff sweep."""
+        self.retries += 1
+
+    def record_failover(self) -> None:
+        """A request landed here after another node failed it first."""
+        self.failovers += 1
+
+    def record_quarantine(self) -> None:
+        """The fleet circuit breaker quarantined this node."""
+        self.quarantines += 1
+
+    def record_probe(self) -> None:
+        """A half-open probe request was admitted to this node."""
+        self.probes += 1
+
     def _lane_summary(self, lane: str) -> Dict:
         completed = self.lane_completed[lane]
         shed = self.lane_shed[lane]
@@ -172,6 +198,7 @@ class ServeMetrics:
         agg: Dict = {"nodes": len(snapshots)}
         for key in ("batches", "rows", "requests_completed", "swaps",
                     "sheds", "admission_rejects", "deadline_misses",
+                    "retries", "failovers", "quarantines", "probes",
                     "recals", "rollbacks"):
             agg[key] = sum(int(s[key]) for s in snapshots)
         agg["throughput_dps"] = float(sum(
@@ -234,5 +261,9 @@ class ServeMetrics:
             "sheds": sum(self.lane_shed.values()),
             "admission_rejects": sum(self.lane_rejected.values()),
             "deadline_misses": sum(self.lane_deadline_miss.values()),
+            "retries": self.retries,
+            "failovers": self.failovers,
+            "quarantines": self.quarantines,
+            "probes": self.probes,
             "lanes": {p: self._lane_summary(p) for p in PRIORITIES},
         }

@@ -37,6 +37,26 @@ from typing import List, Optional, Protocol, runtime_checkable
 import numpy as np
 
 
+class NodeDown(RuntimeError):
+    """A node stopped responding entirely — every boundary call fails.
+
+    The structured fleet-level failure: raised by a dead node's proxy (or
+    the chaos wrapper standing in for one) on ANY boundary operation, and
+    by the fleet health layer when it fails the pending handles of a node
+    declared dead.  Carries ``node`` (the name, when known) and ``op``
+    (the boundary call that hit the corpse) so routers and rollouts can
+    quarantine without string parsing."""
+
+    def __init__(self, node: str = "?", op: str = ""):
+        self.node = node
+        self.op = op
+        where = f" (during {op!r})" if op else ""
+        super().__init__(
+            f"node {node!r} is not responding{where} — it has stopped "
+            f"serving; quarantine it and route around"
+        )
+
+
 @runtime_checkable
 class ServingNode(Protocol):
     """One deployed accelerator, seen from the outside."""

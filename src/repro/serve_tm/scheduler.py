@@ -73,6 +73,25 @@ class Overloaded(RuntimeError):
         )
 
 
+class EngineFault(RuntimeError):
+    """The batch body raised mid-execution: the engine (or demux) failed
+    the whole batch, and every request in it was failed with THIS error
+    instead of being left to block until its own timeout.
+
+    Structured fields: ``slot`` (which model slot's batch died) and
+    ``cause`` (the original exception).  The scheduler loop itself
+    survives — only the batch's requests fail."""
+
+    def __init__(self, slot: str, cause: BaseException):
+        self.slot = slot
+        self.cause = cause
+        super().__init__(
+            f"engine batch for slot {slot!r} failed: "
+            f"{type(cause).__name__}: {cause} — the batch's requests were "
+            f"failed with this error; the serving loop keeps running"
+        )
+
+
 class Scheduler:
     """Continuous-batching driver for one ``TMServer``.
 
@@ -213,14 +232,31 @@ class Scheduler:
             if not spans:  # everything queued had already expired
                 return 0
             t0 = time.perf_counter()
-            sums = server.executor.class_sums(entry.program, X)
-            dt = time.perf_counter() - t0
-            preds = np.argmax(sums, axis=1).astype(np.int32)
+            try:
+                sums = server.executor.class_sums(entry.program, X)
+                dt = time.perf_counter() - t0
+                preds = np.argmax(sums, axis=1).astype(np.int32)
+            except Exception as cause:
+                # a raising batch body must not strand its requests until
+                # their own timeouts: fail every handle in the batch with
+                # a structured error (slot + cause) and keep the loop —
+                # and the other slots' traffic — alive.
+                fault = EngineFault(slot, cause)
+                now = time.perf_counter()
+                for handle, _, _, _ in spans:
+                    handle._fail(fault, now)
+                logger.exception(
+                    "engine batch for slot %r failed; %d request(s) "
+                    "failed with EngineFault", slot, len(spans),
+                )
+                return X.shape[0]
             completed = Batcher.demux(spans, preds, sums)
             server.metrics.record_batch(
                 X.shape[0], server.capacity.batch_capacity, dt, completed
             )
             for handle, _, _, _ in spans:
+                if handle.failed:
+                    continue  # a prior batch already failed this request
                 if handle.done and handle.latency_s is not None:
                     server.metrics.record_request_latency(handle.latency_s)
                     server.metrics.record_lane_completion(

@@ -39,6 +39,10 @@ SUMMARY_KEYS = (
     "sheds",
     "admission_rejects",
     "deadline_misses",
+    "retries",
+    "failovers",
+    "quarantines",
+    "probes",
     "lanes",
 )
 
@@ -69,6 +73,10 @@ AGGREGATE_KEYS = (
     "sheds",
     "admission_rejects",
     "deadline_misses",
+    "retries",
+    "failovers",
+    "quarantines",
+    "probes",
     "recals",
     "rollbacks",
     "throughput_dps",
@@ -84,4 +92,22 @@ AGGREGATE_LANE_KEYS = (
     "rejected",
     "deadline_miss",
     "slo_attainment",
+)
+
+# fleet health: circuit-breaker states and the per-node dict
+# fleet.FleetHealth.summary() renders (validated inside the chaos
+# scenario of BENCH_tm_fleet.json; pinned by the golden-schema test)
+HEALTH_STATES = ("healthy", "degraded", "quarantined", "half_open")
+
+HEALTH_NODE_KEYS = (
+    "state",
+    "successes",
+    "failures",
+    "consecutive_failures",
+    "error_rate",
+    "retries",
+    "failovers",
+    "overloads",
+    "quarantines",
+    "probes",
 )

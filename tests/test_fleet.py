@@ -392,3 +392,21 @@ def test_structured_exceptions_exported_from_both_packages():
         a, s = getattr(accel, name), getattr(serve, name)
         assert a is s, name
         assert name in accel.__all__ and name in serve.__all__
+
+
+def test_failure_exceptions_exported_from_all_three_packages():
+    """NodeDown and EngineFault are stable, identical exports of
+    repro.fleet, repro.serve_tm AND repro.accel — deployment code
+    catches fleet failures from whichever package it already imports."""
+    import repro.accel as accel
+    import repro.fleet as fleet
+    import repro.serve_tm as serve
+
+    for name in ("NodeDown", "EngineFault"):
+        a = getattr(accel, name)
+        f = getattr(fleet, name)
+        s = getattr(serve, name)
+        assert a is s and f is s, name
+        for pkg in (accel, fleet, serve):
+            assert name in pkg.__all__, (name, pkg.__name__)
+    assert fleet.ServingNode is serve.ServingNode
