@@ -339,11 +339,72 @@ def _recal_schema(data: dict):
     return errs
 
 
+def _prune_schema(data: dict):
+    """BENCH_tm_prune.json-specific invariants -> error strings.
+
+    The frontier must be a non-empty baseline->exact->merge->ranked walk:
+    every lossless rung (prune_exact, exact_merge) must claim bit_exact,
+    the ranked rung's holdout accuracy must sit within the declared
+    tolerance of the unpruned baseline, and bytes must shrink
+    monotonically along the walk (the PrunePolicy size gate's hard
+    invariant — a compression pass that grows the artifact is a bug).
+    Full-mode runs additionally gate the headline size claim: the ranked
+    point is >= 30% smaller than the baseline.  Tiny CI runs skip that —
+    an under-trained smoke model carries less redundancy to reclaim."""
+    errs = []
+    frontier = data.get("frontier")
+    if not isinstance(frontier, list) or not frontier:
+        return ["frontier must be a non-empty list"]
+    names = [p.get("point") for p in frontier]
+    for req in ("baseline", "prune_exact", "prune_ranked"):
+        if req not in names:
+            errs.append(f"frontier lacks the {req!r} point")
+    for p in frontier:
+        n = p.get("point", "?")
+        if not isinstance(p.get("bytes"), int):
+            errs.append(f"frontier point {n} lacks integer bytes")
+        if not isinstance(p.get("accuracy"), (int, float)):
+            errs.append(f"frontier point {n} lacks numeric accuracy")
+        if not isinstance(p.get("backends"), dict) or not p["backends"]:
+            errs.append(f"frontier point {n} lacks backend timings")
+        if n in ("prune_exact", "exact_merge") and p.get("bit_exact") is not True:
+            errs.append(f"lossless frontier point {n} not bit-exact")
+    if errs:
+        return errs
+    for prev, cur in zip(frontier, frontier[1:]):
+        if cur["bytes"] > prev["bytes"]:
+            errs.append(
+                f"frontier bytes grew: {prev['point']} {prev['bytes']}B -> "
+                f"{cur['point']} {cur['bytes']}B"
+            )
+    base_acc = data.get("baseline_accuracy")
+    tol = data.get("tolerance")
+    ranked = frontier[names.index("prune_ranked")]
+    if not isinstance(base_acc, (int, float)) or not isinstance(
+        tol, (int, float)
+    ):
+        errs.append("missing numeric baseline_accuracy/tolerance")
+    elif ranked["accuracy"] < base_acc - tol:
+        errs.append(
+            f"ranked accuracy {ranked['accuracy']:.4f} fell below "
+            f"baseline {base_acc:.4f} - tolerance {tol}"
+        )
+    if data.get("tiny") is False:
+        shrink = data.get("ranked_bytes_shrink_vs_baseline")
+        if not isinstance(shrink, (int, float)) or shrink < 0.30:
+            errs.append(
+                f"ranked point shrank only {shrink} vs baseline "
+                f"(claim: >= 30% smaller bytes within tolerance)"
+            )
+    return errs
+
+
 SCHEMA_CHECKS = {
     "BENCH_tm_kernels.json": _kernels_schema,
     "BENCH_tm_serve.json": _serve_schema,
     "BENCH_tm_fleet.json": _fleet_schema,
     "BENCH_tm_recal.json": _recal_schema,
+    "BENCH_tm_prune.json": _prune_schema,
 }
 
 

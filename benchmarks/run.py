@@ -31,6 +31,7 @@ SUITES = {
     "tm_recal": "tm_recal",
     "tm_kernels": "tm_kernels",
     "tm_fleet": "tm_fleet",
+    "tm_prune": "tm_prune",
 }
 ALL = tuple(SUITES)
 

@@ -1,0 +1,193 @@
+"""Prune-pass benchmark: the accuracy-vs-bytes-vs-throughput frontier.
+
+Walks a trained model through the ``repro.prune`` compression ladder —
+
+    baseline -> prune_exact -> exact+merge (PrunePolicy) -> prune_ranked
+
+— and, at every rung, re-negotiates a fresh ``CapacityPlan`` from the
+pruned artifact (the envelope-renegotiation story: smaller programs buy
+tighter compiled shapes) and times every registered engine against it.
+Emits ``BENCH_tm_prune.json`` (CWD) plus the harness CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run --only tm_prune
+
+The correctness proofs ride the bench, as in ``tm_kernels``:
+
+  * exact/merge points are asserted BIT-EXACT against the unpruned dense
+    weighted oracle, per engine;
+  * the ranked point's holdout accuracy is asserted within ``tolerance``
+    of the unpruned baseline;
+  * bytes are asserted monotonically non-increasing along the frontier
+    (the ``PrunePolicy`` size gate makes this a hard invariant).
+
+``BENCH_TINY=1`` shrinks training for the CI smoke step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.accel.capacity import CapacityPlan
+from repro.accel.engine import make_engine
+from repro.core import include_actions
+from repro.core.compress import encode
+from repro.core.tm import batch_class_sums_weighted, predict_weighted, state_from_actions
+from repro.prune import PrunePolicy, PruneReport, PruneResult, prune_exact
+
+from .tm_bench_common import time_call, trained_tm
+
+OUT_PATH = "BENCH_tm_prune.json"
+
+DATASET = "emg"
+TOLERANCE = 0.02
+ENGINES = ("interp", "plan", "popcount", "sharded")
+
+
+def _tiny() -> bool:
+    return os.environ.get("BENCH_TINY", "0") == "1"
+
+
+def _oracle_sums(cfg, acts, X, weights=None):
+    w = None if weights is None else jnp.asarray(weights, jnp.int32)
+    return np.asarray(batch_class_sums_weighted(
+        cfg, state_from_actions(cfg, acts), jnp.asarray(X), w
+    ))
+
+
+def _accuracy(cfg, acts, weights, X, y) -> float:
+    w = None if weights is None else jnp.asarray(weights, jnp.int32)
+    pred = np.asarray(predict_weighted(
+        cfg, state_from_actions(cfg, acts), jnp.asarray(X), w
+    ))
+    return float((pred == np.asarray(y)).mean())
+
+
+def _frontier(cfg, acts, x_hold, y_hold):
+    """[(name, PruneResult)] — the compression ladder, each rung built
+    from the ORIGINAL actions so the reports count cumulative work."""
+    n = int(acts.any(-1).sum())
+    base = PruneResult(
+        actions=acts, weights=None,
+        report=PruneReport(stages=(), n_clauses_before=n, n_clauses_after=n),
+    )
+    return [
+        ("baseline", base),
+        ("prune_exact", prune_exact(cfg, acts)),
+        ("exact_merge", PrunePolicy().apply(cfg, acts)),
+        ("prune_ranked", PrunePolicy(tolerance=TOLERANCE).apply(
+            cfg, acts, X=x_hold, y=y_hold
+        )),
+    ]
+
+
+def _bench_point(name, cfg, result, X, ref_sums, repeats):
+    """Encode one rung, renegotiate its envelope, time every engine."""
+    model = encode(cfg, result.actions, clause_weights=result.weights)
+    plan = CapacityPlan.for_models(
+        [model], batch_words=max(1, X.shape[0] // 32)
+    )
+    exact_claim = name in ("baseline", "prune_exact", "exact_merge")
+
+    point = {
+        "point": name,
+        "bytes": model.n_bytes,
+        "n_instructions": model.n_instructions,
+        "n_clauses": int(result.actions.any(-1).sum()),
+        "weighted": result.weights is not None,
+        "stages": list(result.report.stages),
+        "bit_exact": exact_claim,
+        "capacity": {
+            "instruction_capacity": plan.instruction_capacity,
+            "clause_capacity": plan.clause_capacity,
+            "include_capacity": plan.include_capacity,
+            "weight_planes": plan.weight_planes,
+        },
+        "backends": {},
+    }
+    rows = []
+    for backend in ENGINES:
+        opts = {"implementation": "xla"} if backend == "popcount" else {}
+        eng = make_engine(backend, plan, **opts)
+        prog = eng.program(model)
+        sums = eng.class_sums(prog, X)
+        if exact_claim:
+            # the lossless rungs must reproduce the UNPRUNED sums bit for
+            # bit on every engine — the claim the report publishes
+            assert np.array_equal(sums, ref_sums), (
+                f"{name}/{backend}: pruned class sums diverge from the "
+                f"unpruned oracle"
+            )
+        t = time_call(lambda: eng.class_sums(prog, X), repeats=repeats)
+        B = X.shape[0]
+        point["backends"][backend] = {
+            "us_per_call": t * 1e6,
+            "throughput_dps": B / t,
+        }
+        rows.append((
+            f"tm_prune_{name}_{backend}",
+            f"{t * 1e6:.1f}",
+            f"dps={B / t:.0f};bytes={model.n_bytes}",
+        ))
+    return model, point, rows
+
+
+def run():
+    tiny = _tiny()
+    tm = (
+        trained_tm(DATASET, n_clauses=24, epochs=2) if tiny
+        else trained_tm(DATASET)
+    )
+    cfg = tm.cfg
+    acts = np.asarray(include_actions(cfg, tm.state)).astype(bool)
+    x_hold, y_hold = tm.x_test, tm.y_test
+
+    batch_words = 1 if tiny else 2
+    B = batch_words * 32
+    X = np.asarray(x_hold[:B], np.uint8)
+    ref_sums = _oracle_sums(cfg, acts, X)
+    baseline_acc = _accuracy(cfg, acts, None, x_hold, y_hold)
+
+    report = {
+        "bench": "tm_prune",
+        "tiny": tiny,
+        "dataset": DATASET,
+        "tolerance": TOLERANCE,
+        "baseline_accuracy": baseline_acc,
+        "frontier": [],
+    }
+    rows = []
+    repeats = 5 if tiny else 20
+    for name, result in _frontier(cfg, acts, x_hold, y_hold):
+        model, point, point_rows = _bench_point(
+            name, cfg, result, X, ref_sums, repeats
+        )
+        point["accuracy"] = _accuracy(
+            cfg, result.actions, result.weights, x_hold, y_hold
+        )
+        report["frontier"].append(point)
+        rows.extend(point_rows)
+
+    # -- frontier invariants (assert here, gate again in check_regression) --
+    pts = report["frontier"]
+    for prev, cur in zip(pts, pts[1:]):
+        assert cur["bytes"] <= prev["bytes"], (
+            f"frontier bytes grew: {prev['point']} {prev['bytes']}B -> "
+            f"{cur['point']} {cur['bytes']}B"
+        )
+    ranked = pts[-1]
+    assert ranked["accuracy"] >= baseline_acc - TOLERANCE, (
+        f"ranked point fell out of tolerance: {ranked['accuracy']:.4f} < "
+        f"{baseline_acc:.4f} - {TOLERANCE}"
+    )
+    report["ranked_accuracy"] = ranked["accuracy"]
+    report["ranked_bytes_shrink_vs_baseline"] = (
+        1.0 - ranked["bytes"] / pts[0]["bytes"]
+    )
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    return rows

@@ -39,6 +39,7 @@ QUANTA: Dict[str, int] = {
     "clause_capacity": 1,
     "include_capacity": 1,
     "batch_words": 1,
+    "weight_planes": 1,
 }
 
 # the knobs recalibration can grow (include streams get denser, clauses
@@ -106,6 +107,11 @@ def model_requirements(
         if "include_capacity" in wanted:
             ipc = decoded.includes_per_clause()
             req["include_capacity"] = int(ipc.max()) if ipc.size else 0
+    if "weight_planes" in wanted:
+        # bitplanes of the largest clause weight (repro.prune); 1 for
+        # weightless models, so legacy populations negotiate exactly the
+        # envelope they always did
+        req["weight_planes"] = model.weight_planes
     return req
 
 
@@ -122,10 +128,12 @@ class CapacityPlan:
     clause_capacity: int = 64          # clauses per class (clause tables)
     include_capacity: int = 32         # includes per clause (clause-major)
     batch_words: int = 4               # 32 datapoints per bit-packed word
+    weight_planes: int = 1             # clause-weight bitplanes (repro.prune)
 
     KNOBS = (
         "instruction_capacity", "feature_capacity", "class_capacity",
         "clause_capacity", "include_capacity", "batch_words",
+        "weight_planes",
     )
 
     def __post_init__(self):
@@ -236,3 +244,32 @@ class CapacityPlan:
         for knob, req in model_requirements(model).items():
             knobs[knob] = max(knobs[knob], _quantize(knob, req))
         return CapacityPlan(**knobs)
+
+    def shrink_to(self, model: CompressedModel, decoded=None) -> "CapacityPlan":
+        """``widen_to``'s mirror for the prune pass: the smallest quantized
+        plan <= self that still fits ``model`` — what a pruned artifact's
+        envelope re-negotiates DOWN to (the eFPGA analogue: resynthesize
+        with shallower memories and reclaim the BRAM).  ``batch_words`` is
+        traffic-shaped and passes through unchanged; no knob ever grows
+        (shrink_to of a model that doesn't fit keeps the current depth —
+        use ``widen_to`` for that direction)."""
+        knobs = self.as_dict()
+        for knob, req in model_requirements(model, decoded=decoded).items():
+            knobs[knob] = min(knobs[knob], _quantize(knob, req))
+        return CapacityPlan(**knobs)
+
+    def shrink_diagnostics(
+        self, model: CompressedModel, decoded=None
+    ) -> List[Tuple[str, int, int]]:
+        """``(knob, provisioned, reclaimable_depth)`` for every knob a
+        pruned ``model`` lets the deployment shrink (quantized; empty =
+        the envelope is already minimal for this model).  The read-only
+        companion of ``shrink_to`` — what the recal controller logs when
+        a prune pass makes the published program smaller than the
+        envelope it ships into."""
+        shrunk = self.shrink_to(model, decoded)
+        return [
+            (knob, getattr(self, knob), getattr(shrunk, knob))
+            for knob in self.KNOBS
+            if getattr(shrunk, knob) < getattr(self, knob)
+        ]

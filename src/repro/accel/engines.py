@@ -77,8 +77,18 @@ class InterpEngine(EngineBase):
         p = self.plan
         imem = np.zeros(p.instruction_capacity, np.uint16)
         imem[: model.n_instructions] = model.instructions
+        # per-clause weight memory, indexed by the interpreter's finalize
+        # ordinal (non-empty clauses in emission order).  Always present at
+        # instruction-capacity depth (a clause needs >= 1 instruction, so
+        # it can never be too small) and all-ones for weightless models:
+        # one operand signature -> one compiled program across weighted and
+        # weightless swaps.
+        wmem = np.ones(p.instruction_capacity, np.int32)
+        if model.clause_weights is not None:
+            wmem[: model.n_weights] = model.clause_weights
         return {
             "imem": jnp.asarray(imem),
+            "wmem": jnp.asarray(wmem),
             "n_inst": jnp.int32(model.n_instructions),
             "n_classes": model.n_classes,
             "n_features": model.n_features,
@@ -91,7 +101,7 @@ class InterpEngine(EngineBase):
             jnp.asarray(self._pad_x(x)), p.feature_capacity, p.batch_words
         )
         sums = self._fn(
-            prog["imem"], prog["n_inst"], packed, jnp.int32(B),
+            prog["imem"], prog["n_inst"], packed, jnp.int32(B), prog["wmem"],
             m_cap=p.class_capacity,
         )
         return np.asarray(sums)[: prog["n_classes"], :B].T
@@ -186,6 +196,7 @@ class PopcountEngine(EngineBase):
 
     validated_knobs = (
         "instruction_capacity", "feature_capacity", "class_capacity",
+        "weight_planes",  # the selection-bank depth is a compiled shape
     )
     instruction_metric = "includes"  # operand vectors hold includes only
     needs_decoded_plan = True
@@ -220,9 +231,13 @@ class PopcountEngine(EngineBase):
     def _program(self, model: CompressedModel, decoded=None) -> Dict[str, Any]:
         p = self.plan
         plan = decoded if decoded is not None else decode_to_plan(model)
+        # masks are built at the PLAN's plane depth (not the model's), so
+        # the compiled mask shape is a synthesis-time constant: weighted
+        # and weightless models swap through the same compiled program
         lit_idx, last, mask_pos, mask_neg = plan_to_popcount_operands(
             plan, p.instruction_capacity, p.class_capacity,
             l2_cap=2 * p.feature_capacity,
+            weight_planes=p.weight_planes,
         )
         # the reprogram is pure data movement: resident on-device until the
         # next swap, never retraced (fixed capacity shapes)

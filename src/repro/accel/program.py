@@ -16,15 +16,27 @@ a live accelerator with no shared process state:
 Layout (all little-endian):
 
     header   4s  magic  b"TMPG"
-             H   format version (1)
+             H   format version (1 or 2)
              H   reserved (0)
              I   payload length in bytes
              I   CRC-32 of the payload
-    payload  6I  capacity stamp (instruction, feature, class, clause,
-                 include capacities, batch_words)
+    v1       6I  capacity stamp (instruction, feature, class, clause,
+    payload      include capacities, batch_words)
              4I  model dims (n_classes, n_clauses, n_features,
                  n_instructions)
              H*  the instruction stream, n_instructions uint16 words
+    v2       7I  capacity stamp (v1's six + weight_planes)
+    payload  4I  model dims (as v1)
+             I   n_weights (per-clause weight count; 0 = weightless)
+             H*  the instruction stream, n_instructions uint16 words
+             H*  the clause-weight vector, n_weights uint16 words
+
+Version policy (repro.prune weighted clauses): a weightless model whose
+envelope has no weight planes beyond the implicit one serializes as v1 —
+BYTE-IDENTICAL to every pre-prune artifact (the golden-fixture guarantee).
+Weighted models (or plans provisioning ``weight_planes > 1``) emit v2.
+``from_bytes`` loads both; the CRC covers the weight vector, so corrupted
+weight bytes are refused exactly like corrupted instructions.
 
 ``from_bytes`` refuses truncated blobs, wrong magic, future format
 versions and checksum mismatches with specific errors — a corrupted
@@ -36,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import struct
 import zlib
+from typing import Optional
 
 import numpy as np
 
@@ -43,11 +56,21 @@ from ..core.compress import CompressedModel
 from .capacity import CapacityPlan
 
 MAGIC = b"TMPG"
-FORMAT_VERSION = 1
+FORMAT_VERSION = 2
+
+# the v1 wire order is FROZEN: exactly the six knobs that existed when v1
+# shipped, regardless of what CapacityPlan.KNOBS grows to
+_V1_KNOBS = (
+    "instruction_capacity", "feature_capacity", "class_capacity",
+    "clause_capacity", "include_capacity", "batch_words",
+)
+_V2_KNOBS = _V1_KNOBS + ("weight_planes",)
 
 _HEADER = struct.Struct("<4sHHII")
 _CAPS = struct.Struct("<6I")
+_CAPS_V2 = struct.Struct("<7I")
 _DIMS = struct.Struct("<4I")
+_NWEIGHTS = struct.Struct("<I")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -60,12 +83,27 @@ class TMProgram:
 
     capacity: CapacityPlan
     model: CompressedModel
-    format_version: int = FORMAT_VERSION
+    format_version: Optional[int] = None  # None -> minimal covering version
+
+    def __post_init__(self):
+        version = self.format_version
+        if version is None:
+            # emit the OLDEST format that covers the artifact: weightless
+            # models in a plane-free envelope stay byte-identical v1
+            version = 1 if (
+                not self.model.weighted and self.capacity.weight_planes == 1
+            ) else 2
+            object.__setattr__(self, "format_version", version)
+        if version == 1 and self.model.weighted:
+            raise ValueError(
+                "TMProgram format v1 cannot carry clause weights; "
+                "serialize weighted models as v2"
+            )
 
     # -- identity ------------------------------------------------------------
 
     def __eq__(self, other) -> bool:
-        return (
+        if not (
             isinstance(other, TMProgram)
             and self.format_version == other.format_version
             and self.capacity == other.capacity
@@ -74,7 +112,12 @@ class TMProgram:
             and self.model.n_features == other.model.n_features
             and np.array_equal(self.model.instructions,
                                other.model.instructions)
-        )
+        ):
+            return False
+        a, b = self.model.clause_weights, other.model.clause_weights
+        if (a is None) != (b is None):
+            return False
+        return a is None or bool(np.array_equal(a, b))
 
     __hash__ = None  # mutable-array payload; identity-hashing would lie
 
@@ -82,12 +125,24 @@ class TMProgram:
 
     def _payload(self) -> bytes:
         m = self.model
+        caps = self.capacity.as_dict()
+        dims = _DIMS.pack(
+            m.n_classes, m.n_clauses, m.n_features, m.n_instructions
+        )
+        stream = np.ascontiguousarray(m.instructions, dtype="<u2").tobytes()
+        if self.format_version == 1:
+            return (
+                _CAPS.pack(*(caps[k] for k in _V1_KNOBS)) + dims + stream
+            )
+        weights = b"" if m.clause_weights is None else (
+            np.ascontiguousarray(m.clause_weights, dtype="<u2").tobytes()
+        )
         return (
-            _CAPS.pack(*(self.capacity.as_dict()[k]
-                         for k in CapacityPlan.KNOBS))
-            + _DIMS.pack(m.n_classes, m.n_clauses, m.n_features,
-                         m.n_instructions)
-            + np.ascontiguousarray(m.instructions, dtype="<u2").tobytes()
+            _CAPS_V2.pack(*(caps[k] for k in _V2_KNOBS))
+            + dims
+            + _NWEIGHTS.pack(m.n_weights)
+            + stream
+            + weights
         )
 
     @property
@@ -97,7 +152,11 @@ class TMProgram:
 
     @property
     def n_bytes(self) -> int:
-        return _HEADER.size + _CAPS.size + _DIMS.size + 2 * self.model.n_instructions
+        if self.format_version == 1:
+            return (_HEADER.size + _CAPS.size + _DIMS.size
+                    + 2 * self.model.n_instructions)
+        return (_HEADER.size + _CAPS_V2.size + _DIMS.size + _NWEIGHTS.size
+                + 2 * (self.model.n_instructions + self.model.n_weights))
 
     def to_bytes(self) -> bytes:
         payload = self._payload()
@@ -137,11 +196,21 @@ class TMProgram:
                 "TMProgram checksum mismatch — the artifact was corrupted "
                 "in transit; refusing to load it into a live accelerator"
             )
-        caps = _CAPS.unpack_from(payload, 0)
+        if version == 1:
+            caps_s, knobs, n_weights_s = _CAPS, _V1_KNOBS, 0
+        else:
+            caps_s, knobs, n_weights_s = _CAPS_V2, _V2_KNOBS, _NWEIGHTS.size
+        caps = caps_s.unpack_from(payload, 0)
         n_classes, n_clauses, n_features, n_instructions = _DIMS.unpack_from(
-            payload, _CAPS.size
+            payload, caps_s.size
         )
-        expect = _CAPS.size + _DIMS.size + 2 * n_instructions
+        n_weights = 0
+        if version >= 2:
+            (n_weights,) = _NWEIGHTS.unpack_from(
+                payload, caps_s.size + _DIMS.size
+            )
+        expect = (caps_s.size + _DIMS.size + n_weights_s
+                  + 2 * (n_instructions + n_weights))
         if payload_len != expect:
             # a CRC-consistent blob can still LIE about its own shape
             # (buggy producer): dims promising more words than present, or
@@ -149,20 +218,28 @@ class TMProgram:
             # model, so both are hard errors
             raise ValueError(
                 f"inconsistent TMProgram artifact: dims declare "
-                f"{n_instructions} instructions ({expect} payload bytes) "
-                f"but the payload carries {payload_len}"
+                f"{n_instructions} instructions + {n_weights} weights "
+                f"({expect} payload bytes) but the payload carries "
+                f"{payload_len}"
             )
+        stream_off = caps_s.size + _DIMS.size + n_weights_s
         stream = np.frombuffer(
-            payload, dtype="<u2", count=n_instructions,
-            offset=_CAPS.size + _DIMS.size,
+            payload, dtype="<u2", count=n_instructions, offset=stream_off,
         ).astype(np.uint16)
+        weights = None
+        if n_weights:
+            weights = np.frombuffer(
+                payload, dtype="<u2", count=n_weights,
+                offset=stream_off + 2 * n_instructions,
+            ).astype(np.uint16)
         return cls(
-            capacity=CapacityPlan(**dict(zip(CapacityPlan.KNOBS, caps))),
+            capacity=CapacityPlan(**dict(zip(knobs, caps))),
             model=CompressedModel(
                 instructions=stream,
                 n_classes=n_classes,
                 n_clauses=n_clauses,
                 n_features=n_features,
+                clause_weights=weights,
             ),
             format_version=version,
         )

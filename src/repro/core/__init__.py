@@ -22,7 +22,9 @@ from .tm import (
     clause_polarities,
     class_sums,
     predict,
+    predict_weighted,
     batch_class_sums,
+    batch_class_sums_weighted,
     pack_literals,
     unpack_bits,
     packed_class_sums,
@@ -49,7 +51,9 @@ __all__ = [
     "clause_polarities",
     "class_sums",
     "predict",
+    "predict_weighted",
     "batch_class_sums",
+    "batch_class_sums_weighted",
     "pack_literals",
     "unpack_bits",
     "packed_class_sums",

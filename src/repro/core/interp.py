@@ -84,6 +84,7 @@ def interpret_stream(
     n_instructions: Array,  # int32 scalar   (Instruction Header field)
     packed_features: Array,  # uint32[F_cap, W] feature memory
     n_datapoints: Array,  # int32 scalar   (Feature Header field)
+    clause_weights: "Array | None" = None,  # int32[>=Ncl'] emission order
     *,
     m_cap: int,  # class-sum accumulator depth ("synthesis-time" choice)
 ) -> Array:
@@ -92,24 +93,37 @@ def interpret_stream(
     Rows >= the stream's class count stay 0; datapoint columns >=
     n_datapoints are garbage (caller slices).  Mirrors the hardware: the
     accumulator bank is physically m_cap deep regardless of the model.
+
+    ``clause_weights`` (optional, repro.prune weighted clauses) holds one
+    int32 vote weight per NON-EMPTY clause in stream emission order — the
+    same order the interpreter finalizes clauses in, so a carry-held
+    ordinal counter indexes it directly.  Lone boundary EXTENDs (empty
+    classes) never finalize a non-empty clause and so never consume an
+    ordinal.  ``None`` votes ``pol`` exactly as before.
     """
     i_cap = instructions.shape[0]
     f_cap, w = packed_features.shape
     B = w * 32
     ones = jnp.uint32(0xFFFFFFFF)
 
-    def finalize(sums, cls, pol, acc, gate):
+    def weight_at(wi):
+        if clause_weights is None:
+            return jnp.int32(1)
+        return clause_weights[jnp.clip(wi, 0, clause_weights.shape[0] - 1)]
+
+    def finalize(sums, cls, pol, acc, gate, wi):
         """Scatter-add the finished clause iff ``gate``.
 
         The contribution is zeroed by the gate rather than selecting
         between two whole sum banks (the old ``jnp.where(boundary,
         sums.at[...], sums)`` materialized and re-derived the full
         [m_cap, B] bank every step — dead work on non-boundary steps)."""
-        contrib = jnp.where(gate, pol, 0) * unpack_bits(acc)  # [B]
+        vote = pol * weight_at(wi)
+        contrib = jnp.where(gate, vote, 0) * unpack_bits(acc)  # [B]
         return sums.at[cls].add(contrib)
 
     def step(carry, i):
-        (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, sums) = carry
+        (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, wi, sums) = carry
         ins = instructions[i].astype(jnp.uint32)
         active = i < n_instructions
 
@@ -120,8 +134,10 @@ def interpret_stream(
         off = (ins & OFF_MASK).astype(jnp.int32)
 
         boundary = active & ((e != prev_e) | (cc != prev_cc))
+        finalized = boundary & nonempty
         # finalize previous clause on boundary (single gated scatter-add)
-        sums = finalize(sums, cls, pol, acc, boundary & nonempty)
+        sums = finalize(sums, cls, pol, acc, finalized, wi)
+        wi = wi + finalized.astype(jnp.int32)
         cls = jnp.where(boundary & (e != prev_e), cls + 1, cls)
         ptr = jnp.where(boundary, 0, ptr)
         acc = jnp.where(boundary, ones, acc)
@@ -138,7 +154,7 @@ def interpret_stream(
         lit = jnp.where(lbit == 1, ~word, word)
         acc = jnp.where(do_inc, acc & lit, acc)
         nonempty = nonempty | do_inc
-        return (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, sums), None
+        return (ptr, cls, pol, acc, nonempty, prev_e, prev_cc, wi, sums), None
 
     sums0 = jnp.zeros((m_cap, B), dtype=jnp.int32)
     carry0 = (
@@ -149,13 +165,14 @@ def interpret_stream(
         jnp.bool_(False),  # nonempty
         jnp.uint32(0),  # prev_e
         jnp.uint32(0),  # prev_cc
+        jnp.int32(0),  # wi: finalized non-empty clause ordinal
         sums0,
     )
     carry, _ = jax.lax.scan(step, carry0, jnp.arange(i_cap, dtype=jnp.int32))
-    ptr, cls, pol, acc, nonempty, _, _, sums = carry
+    ptr, cls, pol, acc, nonempty, _, _, wi, sums = carry
     # end-of-stream: finalize the last clause
     cls = jnp.clip(cls, 0, m_cap - 1)
-    sums = finalize(sums, cls, pol, acc, nonempty)
+    sums = finalize(sums, cls, pol, acc, nonempty, wi)
     del n_datapoints  # columns beyond the count are sliced by the caller
     return sums
 
@@ -213,7 +230,12 @@ def plan_class_sums(
 
 
 def pad_plan(plan, i_cap: int, n_clause_cap: int):
-    """Host-side: pad a DecodedPlan to fixed capacities for the jitted path."""
+    """Host-side: pad a DecodedPlan to fixed capacities for the jitted path.
+
+    Clause weights (repro.prune) fold straight into the polarity operand
+    (``cp = weight * pol``): the segmented reduction is already a
+    multiply-accumulate against ``cp``, so weighted execution is the SAME
+    compiled program — and bit-identical to the old path at weight 1."""
     import numpy as np
 
     li = np.zeros(i_cap, dtype=np.int32)
@@ -223,5 +245,5 @@ def pad_plan(plan, i_cap: int, n_clause_cap: int):
     cc = np.zeros(n_clause_cap, dtype=np.int32)
     cp = np.zeros(n_clause_cap, dtype=np.int32)
     cc[: plan.n_clauses_total] = plan.clause_class
-    cp[: plan.n_clauses_total] = plan.clause_pol
+    cp[: plan.n_clauses_total] = plan.weighted_pol
     return li, ci, cc, cp

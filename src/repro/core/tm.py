@@ -123,6 +123,35 @@ def batch_class_sums(cfg: TMConfig, state: Array, x: Array) -> Array:
     )(lits)
 
 
+@partial(jax.jit, static_argnums=0)
+def batch_class_sums_weighted(
+    cfg: TMConfig, state: Array, x: Array, weights: "Array | None" = None
+) -> Array:
+    """int32[B, M] class sums with per-clause vote weights (repro.prune).
+
+    ``weights`` is int[M, C]; each clause votes ``weight * pol`` instead of
+    ``pol``.  ``None`` (or all-ones) is exactly ``batch_class_sums`` — this
+    is THE oracle the weighted engines are property-tested against."""
+    actions = include_actions(cfg, state)
+    lits = literals(x)
+    pol = clause_polarities(cfg)[None, :]  # [1, C]
+    vote = pol if weights is None else weights.astype(jnp.int32) * pol
+
+    def one(row):
+        c = clause_outputs(cfg, actions, row, training=False).astype(jnp.int32)
+        return jnp.sum(c * vote, axis=-1)
+
+    return jax.vmap(one)(lits)
+
+
+def predict_weighted(
+    cfg: TMConfig, state: Array, x: Array, weights: "Array | None" = None
+) -> Array:
+    """Batched weighted prediction: argmax of the weighted class sums."""
+    sums = batch_class_sums_weighted(cfg, state, x, weights)
+    return jnp.argmax(sums, axis=-1).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # Bitpacked inference (paper §3: 32 datapoints per machine word)
 # ---------------------------------------------------------------------------

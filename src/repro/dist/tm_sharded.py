@@ -262,14 +262,19 @@ def fill_clause_tables(plan, Mp: int, C: int, Lc: int, F2: int):
     """DecodedPlan -> clause-major (idx int32[Mp, C, Lc], pol int32[Mp, C]).
 
     Padded idx entries point at the all-ones literal column ``F2``; padded
-    pol entries are 0 so they contribute nothing.  Raises when the plan
-    exceeds the (C, Lc) capacity plan (the mesh analog of "resynthesize
-    with a bigger AcceleratorConfig").  Shared by ``operands_from_plan``
-    and the serve_tm sharded executor.
+    pol entries are 0 so they contribute nothing.  Clause weights
+    (repro.prune) fold straight into the polarity table
+    (``pol = weight * polarity``) — the local executor's
+    ``clause * pol`` sum is already a weighted vote, so weighted models
+    run the SAME compiled shard_map, bit-identical at weight 1.  Raises
+    when the plan exceeds the (C, Lc) capacity plan (the mesh analog of
+    "resynthesize with a bigger AcceleratorConfig").  Shared by
+    ``operands_from_plan`` and the serve_tm sharded executor.
     """
     idx = np.full((Mp, C, Lc), F2, np.int32)
     pol = np.zeros((Mp, C), np.int32)
     next_slot = np.zeros(Mp, np.int64)
+    wpol = plan.weighted_pol
     # clause_id is sorted (decode_to_plan emits stream order), so one
     # searchsorted gives every clause's include span.
     bounds = np.searchsorted(
@@ -287,7 +292,7 @@ def fill_clause_tables(plan, Mp: int, C: int, Lc: int, F2: int):
                 f"clause {c} has {ks.size} includes; capacity {Lc}"
             )
         idx[m, j, : ks.size] = ks
-        pol[m, j] = int(plan.clause_pol[c])
+        pol[m, j] = int(wpol[c])
     return idx, pol
 
 

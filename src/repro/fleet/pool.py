@@ -22,7 +22,8 @@ misfitting node instead of half-deploying).
 from __future__ import annotations
 
 import logging
-from typing import Dict, Iterator, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
 
 from ..accel.capacity import CapacityExceeded
 from ..serve_tm.metrics import ServeMetrics
@@ -50,13 +51,31 @@ def _validate_for_node(node, model, name: str, action: str) -> None:
 class FleetPool:
     """name -> ``ServingNode``, plus fleet-level lifecycle and rollups."""
 
-    def __init__(self, nodes: Optional[Dict[str, ServingNode]] = None):
+    def __init__(
+        self,
+        nodes: Optional[Dict[str, ServingNode]] = None,
+        *,
+        max_warnings: int = 256,
+    ):
+        if max_warnings < 1:
+            raise ValueError(
+                f"max_warnings must be >= 1, got {max_warnings}"
+            )
         self._nodes: Dict[str, ServingNode] = {}
         # drain/stop failures on dead nodes downgrade to entries here —
-        # teardown always completes, operators read what it swallowed
-        self.warnings: List[str] = []
+        # teardown always completes, operators read what it swallowed.
+        # Ring-buffered: a long-lived pool with a flapping node keeps the
+        # newest ``max_warnings`` entries instead of growing unboundedly.
+        self.warnings: Deque[str] = deque(maxlen=max_warnings)
         for name, node in (nodes or {}).items():
             self.add(name, node)
+
+    def clear_warnings(self) -> List[str]:
+        """Drain the warning ring: returns what was recorded (oldest
+        first) and empties the buffer — the operator's ack."""
+        drained = list(self.warnings)
+        self.warnings.clear()
+        return drained
 
     # -- membership ----------------------------------------------------------
 

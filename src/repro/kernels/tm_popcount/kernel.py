@@ -85,18 +85,44 @@ def bit_transpose32(x: jax.Array, axis: int) -> jax.Array:
 
 def popcount_reduce(
     emit_words: jax.Array,  # uint32[I, W], I % 32 == 0; 0 unless emitting
-    mask_pos: jax.Array,  # uint32[m_cap, I // 32]
-    mask_neg: jax.Array,  # uint32[m_cap, I // 32]
+    mask_pos: jax.Array,  # uint32[m_cap, I//32] or uint32[P, m_cap, I//32]
+    mask_neg: jax.Array,  # same shape as mask_pos
 ) -> jax.Array:
-    """Emit buffer + polarity-bank bitplanes -> int32[m_cap, W*32] sums."""
+    """Emit buffer + polarity-bank bitplanes -> int32[m_cap, W*32] sums.
+
+    2-D masks are the classic unit-weight banks.  3-D masks are the
+    repro.prune weighted form: plane ``b`` selects emitting instructions
+    whose clause weight has bit ``b`` set, and the reduction becomes
+
+        sums = sum_b ((pop(T & pos[b]) - pop(T & neg[b])) << b)
+
+    — shifted popcounts, NO multiplies, so the weighted engine keeps the
+    paper's bitwise-only execution contract.  Plane 0 of an all-ones
+    weight vector reproduces the unit-weight banks bit-exactly."""
     i, w = emit_words.shape
     planes = bit_transpose32(emit_words.reshape(i // 32, 32, w), axis=1)
     # planes[c, b, w] bit j = clause-output bit b (datapoint 32w+b) of
     # instruction 32c+j; select per class with one AND, count with popcount
-    pos = jax.lax.population_count(planes[None] & mask_pos[:, :, None, None])
-    neg = jax.lax.population_count(planes[None] & mask_neg[:, :, None, None])
-    sums = (pos.astype(jnp.int32) - neg.astype(jnp.int32)).sum(axis=1)
-    return sums.transpose(0, 2, 1).reshape(mask_pos.shape[0], w * 32)
+    if mask_pos.ndim == 2:
+        pos = jax.lax.population_count(
+            planes[None] & mask_pos[:, :, None, None]
+        )
+        neg = jax.lax.population_count(
+            planes[None] & mask_neg[:, :, None, None]
+        )
+        sums = (pos.astype(jnp.int32) - neg.astype(jnp.int32)).sum(axis=1)
+        return sums.transpose(0, 2, 1).reshape(mask_pos.shape[0], w * 32)
+    p, m_cap, _ = mask_pos.shape
+    pos = jax.lax.population_count(
+        planes[None, None] & mask_pos[:, :, :, None, None]
+    )  # [P, m, chunks, 32, W]
+    neg = jax.lax.population_count(
+        planes[None, None] & mask_neg[:, :, :, None, None]
+    )
+    per_plane = (pos.astype(jnp.int32) - neg.astype(jnp.int32)).sum(axis=2)
+    shifts = jnp.arange(p, dtype=jnp.int32)[:, None, None, None]
+    sums = jnp.left_shift(per_plane, shifts).sum(axis=0)  # [m, 32, W]
+    return sums.transpose(0, 2, 1).reshape(m_cap, w * 32)
 
 
 def _tm_popcount_kernel(
@@ -155,7 +181,25 @@ def tm_popcount(
     Block shapes default to the measured ``kernels.tuning`` table for this
     capacity point; ``block_instructions`` must be a multiple of 32 (the
     class masks pack 32 instructions per word).
+
+    3-D masks (``[P, m_cap, chunks]``, repro.prune weighted clauses) run
+    the SAME kernel with the plane axis flattened into the class axis —
+    the kernel popcounts ``P * m_cap`` banks — and the per-plane sums are
+    combined outside with shifted adds (``<< b``), keeping the kernel body
+    untouched and the whole path multiply-free.
     """
+    if mask_pos.ndim == 3:
+        p, m_cap, chunks = mask_pos.shape
+        sums = tm_popcount(
+            lit_idx, last_flag,
+            mask_pos.reshape(p * m_cap, chunks),
+            mask_neg.reshape(p * m_cap, chunks),
+            packed_lits,
+            block_instructions=block_instructions,
+            block_words=block_words, interpret=interpret,
+        ).reshape(p, m_cap, -1)
+        shifts = jnp.arange(p, dtype=jnp.int32)[:, None, None]
+        return jnp.left_shift(sums, shifts).sum(axis=0)
     i_cap = lit_idx.shape[0]
     m_cap = mask_pos.shape[0]
     l2, w = packed_lits.shape
@@ -240,9 +284,10 @@ def tm_popcount_xla(
     i_pad = -(-i_cap // 32) * 32
     lit_idx = jnp.pad(lit_idx, (0, i_pad - i_cap))
     last_flag = jnp.pad(last_flag, (0, i_pad - i_cap))
-    pad_chunks = i_pad // 32 - mask_pos.shape[1]
-    mask_pos = jnp.pad(mask_pos, ((0, 0), (0, pad_chunks)))
-    mask_neg = jnp.pad(mask_neg, ((0, 0), (0, pad_chunks)))
+    pad_chunks = i_pad // 32 - mask_pos.shape[-1]
+    lead = ((0, 0),) * (mask_pos.ndim - 1)
+    mask_pos = jnp.pad(mask_pos, lead + ((0, pad_chunks),))
+    mask_neg = jnp.pad(mask_neg, lead + ((0, pad_chunks),))
 
     sel = jnp.take(packed_lits, lit_idx, axis=0)  # [I, W] literal select
     emit = last_flag == 1

@@ -58,8 +58,54 @@ def pack_class_masks(
     return mask_pos, mask_neg
 
 
+def pack_class_masks_weighted(
+    last: np.ndarray,  # int32[I_cap] 1 = clause boundary (emit)
+    pol: np.ndarray,  # int32[I_cap] +1/-1, read where last == 1
+    cls: np.ndarray,  # int32[I_cap] class id, read where last == 1
+    weights: np.ndarray,  # int32[I_cap] clause weight, read where last == 1
+    m_cap: int,
+    weight_planes: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Weighted emit metadata -> bitplane-decomposed polarity banks
+    ``uint32[weight_planes, m_cap, ceil(I/32)]`` (repro.prune).
+
+    Plane ``b`` selects instruction ``32c + j`` iff it emits a clause of
+    that class AND bit ``b`` of the clause's weight is set, so the
+    popcount reduction recovers ``weight * clause_output`` as
+    ``sum_b (popcount << b)`` — shifted popcounts, no multiplies.  An
+    all-ones weight vector occupies plane 0 only, reproducing the
+    unit-weight banks exactly.  Raises when a weight needs more planes
+    than provisioned (``weight_planes`` is a synthesis-time mask depth —
+    the capacity knob the popcount engine validates)."""
+    weights = np.asarray(weights)
+    emitting = np.flatnonzero(np.asarray(last) == 1)
+    w_emit = weights[emitting]
+    if emitting.size:
+        need = int(w_emit.max()).bit_length()
+        if need > weight_planes:
+            t = int(emitting[int(np.argmax(w_emit))])
+            raise ValueError(
+                f"instruction {t}: clause weight {int(weights[t])} needs "
+                f"{need} bitplanes but the plan provisions "
+                f"weight_planes={weight_planes}; re-negotiate the envelope"
+            )
+    planes = []
+    for b in range(weight_planes):
+        sel = np.zeros_like(np.asarray(last))
+        sel[emitting] = (w_emit >> b) & 1
+        planes.append(pack_class_masks(last * sel, pol, cls, m_cap))
+    mask_pos = np.stack([p for p, _ in planes])
+    mask_neg = np.stack([n for _, n in planes])
+    return mask_pos, mask_neg
+
+
 def plan_to_popcount_operands(
-    plan: DecodedPlan, i_cap: int, m_cap: int, *, l2_cap: int | None = None
+    plan: DecodedPlan,
+    i_cap: int,
+    m_cap: int,
+    *,
+    l2_cap: int | None = None,
+    weight_planes: int | None = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Flatten + validate the plan into popcount-kernel operands.
 
@@ -67,6 +113,12 @@ def plan_to_popcount_operands(
     slots against ``l2_cap`` when given, and packs the class masks —
     ``pack_class_masks`` owns the class-capacity validation (emitting
     instructions are the only ones the popcount routing ever reads).
+
+    ``weight_planes`` controls the mask layout: ``None`` keeps the classic
+    2-D banks for weightless plans (and auto-sizes 3-D banks for weighted
+    ones); an explicit int always builds 3-D ``[P, m_cap, chunks]`` banks
+    at exactly that synthesis-time depth — what the popcount engine pins
+    so weighted/weightless swaps never change a compiled shape.
     """
     lit_idx, last, pol, cls = plan_to_operands(plan, i_cap)
     if l2_cap is not None and plan.n_includes > 0:
@@ -80,7 +132,16 @@ def plan_to_popcount_operands(
                 f"instruction {t}: literal slot {int(lit_idx[t])} out of "
                 f"range for feature memory depth {l2_cap}"
             )
-    mask_pos, mask_neg = pack_class_masks(last, pol, cls, m_cap)
+    if weight_planes is None and plan.clause_weight is None:
+        mask_pos, mask_neg = pack_class_masks(last, pol, cls, m_cap)
+        return lit_idx, last, mask_pos, mask_neg
+    planes = plan.weight_planes if weight_planes is None else weight_planes
+    wts = np.ones(i_cap, np.int32)
+    if plan.n_includes > 0:
+        wts[: plan.n_includes] = plan.weights[plan.clause_id]
+    mask_pos, mask_neg = pack_class_masks_weighted(
+        last, pol, cls, wts, m_cap, planes
+    )
     return lit_idx, last, mask_pos, mask_neg
 
 

@@ -1,0 +1,140 @@
+"""Per-clause vote-contribution ranking + exact dead-clause detection.
+
+The ranking signal is the ablation class-sum delta: removing clause
+``(m, j)`` changes row ``m`` of the class-sum matrix by exactly
+``-pol * weight * fires(j, x)`` on every datapoint ``x``, so the total
+absolute inference impact of a clause over a traffic sample ``X`` is
+
+    contribution(m, j) = weight(m, j) * |{x in X : clause (m, j) fires}|
+
+— no re-encoding, no second engine pass: one batched dense sweep over the
+replay-buffer/holdout sample scores every clause at once.
+
+Dead-clause detection is structural (traffic-independent) and PROVABLY
+zero-impact on all inputs:
+
+  * empty clauses           no includes -> output 0 at inference;
+  * contradictory clauses   include both literal ``2f`` and its complement
+                            ``2f+1`` -> can never fire;
+  * cancelled groups        clauses of one class with IDENTICAL include
+                            sets fire identically, so their net vote is
+                            ``sum(+w for even slots) - sum(w for odd)``;
+                            a group whose net is 0 contributes nothing.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tm import TMConfig, literals
+
+
+def _as_actions(cfg: TMConfig, actions: np.ndarray) -> np.ndarray:
+    actions = np.asarray(actions, dtype=bool)
+    expect = (cfg.n_classes, cfg.n_clauses, cfg.n_literals)
+    if actions.shape != expect:
+        raise ValueError(
+            f"actions must be bool{list(expect)}, got {actions.shape}"
+        )
+    return actions
+
+
+def _weights_or_ones(cfg: TMConfig, weights) -> np.ndarray:
+    if weights is None:
+        return np.ones((cfg.n_classes, cfg.n_clauses), np.int64)
+    w = np.asarray(weights)
+    if w.shape != (cfg.n_classes, cfg.n_clauses):
+        raise ValueError(
+            f"weights must be int[{cfg.n_classes}, {cfg.n_clauses}], got "
+            f"shape {w.shape}"
+        )
+    return w.astype(np.int64)
+
+
+def clause_fire_counts(
+    cfg: TMConfig, actions: np.ndarray, X: np.ndarray
+) -> np.ndarray:
+    """int64[M, C]: rows of ``X`` each clause fires on (inference
+    semantics: empty clauses never fire).
+
+    One batched pass: a clause fires iff every included literal is 1, i.e.
+    iff its hit count ``sum_l actions[m,c,l] * lits[b,l]`` reaches its
+    include count — a single einsum over the traffic sample."""
+    actions = _as_actions(cfg, actions)
+    X = np.asarray(X)
+    lits = np.asarray(literals(jnp.asarray(X, bool))).astype(np.int64)
+    includes = actions.sum(axis=-1)  # [M, C]
+    hits = np.einsum(
+        "bl,mcl->bmc", lits, actions.astype(np.int64), optimize=True
+    )
+    fires = (hits == includes[None]) & (includes[None] > 0)
+    return fires.sum(axis=0).astype(np.int64)
+
+
+def vote_contribution(
+    cfg: TMConfig,
+    actions: np.ndarray,
+    X: np.ndarray,
+    weights: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """int64[M, C]: total |class-sum delta| over ``X`` if the clause were
+    ablated — ``weight * fire_count``.  THE ranking key of
+    ``prune_ranked``; zero-contribution clauses are free to drop on this
+    traffic (though only ``dead_clause_mask`` proves them dead on ALL
+    traffic)."""
+    w = _weights_or_ones(cfg, weights)
+    return clause_fire_counts(cfg, actions, X) * w
+
+
+def contradictory_clauses(cfg: TMConfig, actions: np.ndarray) -> np.ndarray:
+    """bool[M, C]: clauses including some feature AND its complement —
+    structurally unsatisfiable, they can never fire on any input."""
+    actions = _as_actions(cfg, actions)
+    a = actions.reshape(cfg.n_classes, cfg.n_clauses, cfg.n_features, 2)
+    return np.any(a[..., 0] & a[..., 1], axis=-1)
+
+
+def duplicate_groups(
+    cfg: TMConfig, actions: np.ndarray
+) -> Dict[Tuple[int, bytes], List[int]]:
+    """Group non-empty clauses of each class by their exact include set.
+
+    -> ``{(class, include-set key): [clause slots]}``, only groups with
+    >= 2 members.  Clauses in one group fire identically on EVERY input,
+    which is what makes cancellation (rank) and weighted merging (passes)
+    exact rather than approximate."""
+    actions = _as_actions(cfg, actions)
+    groups: Dict[Tuple[int, bytes], List[int]] = defaultdict(list)
+    for m in range(cfg.n_classes):
+        for j in range(cfg.n_clauses):
+            row = actions[m, j]
+            if row.any():
+                groups[(m, row.tobytes())].append(j)
+    return {k: v for k, v in groups.items() if len(v) >= 2}
+
+
+def dead_clause_mask(
+    cfg: TMConfig,
+    actions: np.ndarray,
+    weights: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """bool[M, C]: provably-zero contributors on ALL inputs.
+
+    Union of: empty clauses, contradictory clauses, and duplicate groups
+    whose net weighted vote cancels to zero (equal positive and negative
+    weight over identical firing behaviour).  ``prune_exact`` drops
+    exactly this set — bit-exactness follows by construction."""
+    actions = _as_actions(cfg, actions)
+    w = _weights_or_ones(cfg, weights)
+    dead = ~actions.any(axis=-1)  # empty
+    dead |= contradictory_clauses(cfg, actions)
+    for (m, _), slots in duplicate_groups(cfg, actions).items():
+        live = [j for j in slots if not dead[m, j]]
+        net = sum(int(w[m, j]) * (1 if j % 2 == 0 else -1) for j in live)
+        if live and net == 0:
+            dead[m, live] = True
+    return dead

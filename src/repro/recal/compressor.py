@@ -17,7 +17,7 @@ artifact — the wire-portable thing the controller actually publishes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +25,7 @@ from ..accel.capacity import CapacityPlan
 from ..accel.program import TMProgram
 from ..core.compress import CompressedModel, encode, validate_roundtrip
 from ..core.tm import TMConfig, include_actions
+from ..prune import PrunePolicy, PruneReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +37,10 @@ class CompressionReport:
     compression_ratio: float
     probe_rows: int
     artifact: Optional[TMProgram] = None  # stamped when a plan was given
+    prune: Optional[PruneReport] = None  # stamped when a policy ran
+    # per-knob (name, provisioned, reclaimable) rows with reclaimable > 0:
+    # how much tighter a renegotiated envelope could be for THIS artifact
+    shrink: Tuple[Tuple[str, int, int], ...] = ()
 
 
 class Compressor:
@@ -72,12 +77,29 @@ class Compressor:
         state,
         *,
         traffic_sample: Optional[np.ndarray] = None,
+        labels: Optional[np.ndarray] = None,
+        prune: Optional[PrunePolicy] = None,
     ) -> CompressionReport:
         """Encode + validate.  ``traffic_sample`` ({0,1}[B, F]) extends the
         deterministic probe with rows from the live distribution, so the
-        gate exercises exactly the inputs the swap will face."""
+        gate exercises exactly the inputs the swap will face.
+
+        ``prune`` runs the compression pass between train and publish:
+        the policy sees the traffic sample (ranking + ranked-drop gating,
+        when ``labels`` accompany it) and the PRUNED actions/weights are
+        what gets encoded — the roundtrip gate then proves the pruned
+        weighted stream against the pruned dense oracle, so an unsound
+        prune is refused publication exactly like a corrupt encode."""
         actions = np.asarray(include_actions(cfg, state))
-        model = encode(cfg, actions)
+        weights = None
+        prune_report = None
+        if prune is not None:
+            result = prune.apply(
+                cfg, actions, X=traffic_sample, y=labels
+            )
+            actions, weights = result.actions, result.weights
+            prune_report = result.report
+        model = encode(cfg, actions, clause_weights=weights)
         rng = np.random.default_rng(self.probe_seed)
         probe = rng.integers(
             0, 2, (self.probe_rows, cfg.n_features)
@@ -90,7 +112,7 @@ class Compressor:
                     f"got {sample.shape}"
                 )
             probe = np.concatenate([probe, sample], axis=0)
-        validate_roundtrip(cfg, actions, model, probe)
+        validate_roundtrip(cfg, actions, model, probe, clause_weights=weights)
         artifact = None
         if self.engine is not None:
             # the capacity half of the gate: raises CapacityExceeded with
@@ -101,10 +123,22 @@ class Compressor:
         elif self.plan is not None:
             self.plan.validate(model, self.validate_knobs)
             artifact = TMProgram(capacity=self.plan, model=model)
+        shrink: Tuple[Tuple[str, int, int], ...] = ()
+        if artifact is not None:
+            # envelope-renegotiation intel for the operator: how much of
+            # the provisioned plan this (possibly pruned) artifact no
+            # longer needs.  Diagnostics only — the published artifact
+            # keeps the negotiated plan so no engine recompiles.
+            shrink = tuple(
+                row for row in artifact.capacity.shrink_diagnostics(model)
+                if row[2] > 0
+            )
         return CompressionReport(
             model=model,
             n_includes=int(actions.sum()),
             compression_ratio=model.compression_ratio(cfg),
             probe_rows=probe.shape[0],
             artifact=artifact,
+            prune=prune_report,
+            shrink=shrink,
         )

@@ -30,6 +30,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..prune import PrunePolicy
 from .compressor import Compressor
 from .monitor import DriftMonitor
 from .worker import RecalWorker
@@ -49,6 +50,11 @@ class RecalEvent:
     holdout_acc_after: float
     rolled_back: bool
     compression_ratio: float
+    # prune-pass stamp (defaults keep pre-prune consumers working)
+    pruned_clauses: int = 0
+    prune_stages: tuple = ()
+    # (knob, provisioned, reclaimable) envelope-renegotiation diagnostics
+    reclaimable: tuple = ()
 
 
 class RecalController:
@@ -66,6 +72,7 @@ class RecalController:
         min_buffer_rows: Optional[int] = None,
         holdout_fraction: float = 0.25,
         regression_margin: float = 0.02,
+        prune: Optional[PrunePolicy] = None,
     ):
         self.server = server
         self.slot = slot
@@ -98,6 +105,12 @@ class RecalController:
         self.min_buffer_rows = min_buffer_rows or train_batch_size
         self.holdout_fraction = holdout_fraction
         self.regression_margin = regression_margin
+        # the model-compression pass between train and publish: every
+        # deploy/recal publication goes through the policy.  deploy() has
+        # no labelled holdout, so only the bit-exact passes run there;
+        # recalibrate() hands the policy the holdout slice, enabling the
+        # tolerance-gated ranked drop too.
+        self.prune = prune
         self._buffer: deque = deque(maxlen=buffer_batches)
         self._refreeze_pending = False
         self.events: list = []
@@ -109,7 +122,9 @@ class RecalController:
         slot (initial deployment or a manual push).  Publishes the
         stamped ``TMProgram`` artifact when the compressor carries a
         capacity plan."""
-        report = self.compressor.compress(self.worker.cfg, self.worker.state)
+        report = self.compressor.compress(
+            self.worker.cfg, self.worker.state, prune=self.prune
+        )
         self.server.register(
             self.slot,
             report.artifact if report.artifact is not None else report.model,
@@ -203,7 +218,8 @@ class RecalController:
         try:
             t0 = time.perf_counter()
             report = self.compressor.compress(
-                self.worker.cfg, self.worker.state, traffic_sample=X_hold
+                self.worker.cfg, self.worker.state,
+                traffic_sample=X_hold, labels=Y_hold, prune=self.prune,
             )
             compress_s = time.perf_counter() - t0
 
@@ -245,6 +261,13 @@ class RecalController:
             holdout_acc_after=acc_after,
             rolled_back=rolled_back,
             compression_ratio=report.compression_ratio,
+            pruned_clauses=(
+                0 if report.prune is None else report.prune.n_removed
+            ),
+            prune_stages=(
+                () if report.prune is None else report.prune.stages
+            ),
+            reclaimable=report.shrink,
         )
         self.events.append(event)
         return event

@@ -79,6 +79,8 @@ def test_for_models_minimality_per_quantum():
     for knob in CapacityPlan.KNOBS:
         if knob == "batch_words":  # traffic-shaped, not model-derived
             continue
+        if getattr(plan, knob) - QUANTA[knob] < 1:
+            continue  # already at the floor (e.g. weight_planes=1)
         shrunk = dataclasses.replace(
             plan, **{knob: getattr(plan, knob) - QUANTA[knob]}
         )

@@ -1,0 +1,639 @@
+"""repro.prune: ETHEREAL-style clause pruning + weighted clauses.
+
+Covers the ISSUE-10 acceptance surface: prune_exact bit-exact on all four
+engines (property-tested, including all-excluded and duplicate-clause
+cases), merge_weighted's lossless weighted collapse, the tolerance-gated
+ranked drop, weighted execution end-to-end (encode -> wire -> every
+engine vs the ``batch_class_sums_weighted`` oracle, popcount staying
+multiply-free via bitplane decomposition), the TMProgram v2 wire format
+with the v1 golden-fixture byte-stability guarantee, the
+``weight_planes`` capacity knob + shrink diagnostics, the
+zero-clause-class ``validate_roundtrip`` gate, and the
+``RecalController(prune=...)`` integration.
+"""
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.accel import (
+    CapacityPlan,
+    HEADROOM_KNOBS,
+    QUANTA,
+    TMProgram,
+    make_engine,
+    model_requirements,
+)
+from repro.core import (
+    TMConfig,
+    batch_class_sums,
+    batch_class_sums_weighted,
+    state_from_actions,
+)
+from repro.core.compress import (
+    CompressedModel,
+    decode,
+    decode_to_plan,
+    decode_weights,
+    encode,
+    validate_roundtrip,
+)
+from repro.core.tm import clause_outputs, literals
+from repro.kernels.tm_popcount.ops import (
+    pack_class_masks,
+    pack_class_masks_weighted,
+)
+from repro.prune import (
+    PrunePolicy,
+    clause_fire_counts,
+    contradictory_clauses,
+    dead_clause_mask,
+    duplicate_groups,
+    merge_weighted,
+    prune_exact,
+    prune_ranked,
+    vote_contribution,
+)
+
+ENGINE_NAMES = ("interp", "plan", "sharded", "popcount")
+DATA_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+
+
+def _oracle(cfg, acts, X, weights=None):
+    w = None if weights is None else jnp.asarray(weights, jnp.int32)
+    return np.asarray(batch_class_sums_weighted(
+        cfg, state_from_actions(cfg, acts), jnp.asarray(X), w
+    ))
+
+
+def _engine_sums(name, model, X):
+    plan = CapacityPlan.for_models([model], batch_words=2)
+    opts = {"implementation": "xla"} if name == "popcount" else {}
+    eng = make_engine(name, plan, **opts)
+    prog = eng.program(model)
+    return eng.class_sums(prog, X)
+
+
+def _messy_actions(rng, cfg, density=0.2):
+    """Random mask seeded with every dead-clause species: all-excluded
+    rows, contradictory rows, duplicate groups (cancelling and not)."""
+    M, C, L = cfg.n_classes, cfg.n_clauses, cfg.n_literals
+    acts = rng.random((M, C, L)) < density
+    acts[:, C - 1, :] = False  # all-excluded everywhere
+    if C >= 4:
+        acts[0, 1] = False  # contradictory clause
+        acts[0, 1, 0] = acts[0, 1, 1] = True
+        # a cancelling duplicate pair (even + odd slot, same litset) ...
+        acts[1, 0] = False
+        acts[1, 1] = False
+        acts[1, 0, 2] = acts[1, 1, 2] = True
+        # ... and a same-parity duplicate pair that must NOT cancel
+        acts[2, 0] = False
+        acts[2, 2] = False
+        acts[2, 0, 4] = acts[2, 2, 4] = True
+    return acts
+
+
+# ---------------------------------------------------------------------------
+# ranking + dead-clause detection
+# ---------------------------------------------------------------------------
+
+def test_fire_counts_match_dense_clause_outputs():
+    rng = np.random.default_rng(0)
+    cfg = TMConfig(n_classes=3, n_clauses=8, n_features=7)
+    acts = _messy_actions(rng, cfg)
+    X = rng.integers(0, 2, (40, cfg.n_features)).astype(np.uint8)
+    counts = clause_fire_counts(cfg, acts, X)
+    ref = np.zeros((cfg.n_classes, cfg.n_clauses), np.int64)
+    for row in np.asarray(literals(jnp.asarray(X, bool))):
+        ref += np.asarray(clause_outputs(
+            cfg, jnp.asarray(acts), jnp.asarray(row), training=False
+        )).astype(np.int64)
+    assert np.array_equal(counts, ref)
+
+
+def test_vote_contribution_is_weight_times_fires():
+    rng = np.random.default_rng(1)
+    cfg = TMConfig(n_classes=2, n_clauses=6, n_features=5)
+    acts = rng.random((2, 6, 10)) < 0.3
+    w = rng.integers(1, 9, (2, 6))
+    X = rng.integers(0, 2, (24, 5)).astype(np.uint8)
+    assert np.array_equal(
+        vote_contribution(cfg, acts, X, w),
+        clause_fire_counts(cfg, acts, X) * w,
+    )
+
+
+def test_dead_clause_mask_species():
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=4)
+    acts = np.zeros((3, 6, 8), bool)
+    acts[0, 0, 0] = True  # live
+    acts[0, 2, 2] = acts[0, 2, 3] = True  # contradictory (feature 1 + f̄1)
+    acts[1, 0, 4] = acts[1, 1, 4] = True  # cancelling +/- duplicate pair
+    acts[2, 0, 6] = acts[2, 2, 6] = True  # same-parity duplicates: live
+    dead = dead_clause_mask(cfg, acts)
+    assert not dead[0, 0]
+    assert dead[0, 1]  # empty
+    assert dead[0, 2]  # contradictory
+    assert dead[1, 0] and dead[1, 1]  # cancelled group
+    assert not dead[2, 0] and not dead[2, 2]
+    # weights break the cancellation: +2 vs -1 nets +1, so the pair lives
+    w = np.ones((3, 6), np.int64)
+    w[1, 0] = 2
+    dead_w = dead_clause_mask(cfg, acts, w)
+    assert not dead_w[1, 0] and not dead_w[1, 1]
+
+
+def test_duplicate_groups_keys_on_class_and_litset():
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=3)
+    acts = np.zeros((2, 4, 6), bool)
+    acts[0, 0, 0] = acts[0, 1, 0] = acts[0, 3, 0] = True  # one group of 3
+    acts[1, 0, 0] = True  # same litset, OTHER class: not grouped
+    groups = duplicate_groups(cfg, acts)
+    assert len(groups) == 1
+    ((m, _), slots), = groups.items()
+    assert m == 0 and slots == [0, 1, 3]
+
+
+# ---------------------------------------------------------------------------
+# prune_exact / merge_weighted: bit-exact on every engine (property test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+@pytest.mark.parametrize("seed", range(3))
+def test_prune_exact_bit_exact_on_every_engine(engine, seed):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(2, 5))
+    C = int(rng.integers(4, 9))
+    F = int(rng.integers(4, 12))
+    cfg = TMConfig(n_classes=M, n_clauses=C, n_features=F)
+    acts = _messy_actions(rng, cfg)
+    X = rng.integers(0, 2, (32, F)).astype(np.uint8)
+
+    r = prune_exact(cfg, acts)
+    assert r.report.n_dead >= 1  # the seeded all-excluded rows at least
+    model = encode(cfg, r.actions, clause_weights=r.weights)
+    assert np.array_equal(_engine_sums(engine, model, X),
+                          _oracle(cfg, acts, X))
+
+
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+@pytest.mark.parametrize("seed", range(3))
+def test_merge_weighted_bit_exact_on_every_engine(engine, seed):
+    rng = np.random.default_rng(100 + seed)
+    cfg = TMConfig(n_classes=3, n_clauses=8, n_features=6)
+    acts = _messy_actions(rng, cfg)
+    X = rng.integers(0, 2, (32, cfg.n_features)).astype(np.uint8)
+
+    r = prune_exact(cfg, acts)
+    r = merge_weighted(cfg, r.actions, r.weights)
+    assert r.weights is not None  # the seeded same-parity pair merged
+    model = encode(cfg, r.actions, clause_weights=r.weights)
+    assert model.weighted
+    assert np.array_equal(_engine_sums(engine, model, X),
+                          _oracle(cfg, acts, X))
+
+
+def test_merge_survivor_parity_and_cancelled_group():
+    cfg = TMConfig(n_classes=1, n_clauses=6, n_features=3)
+    acts = np.zeros((1, 6, 6), bool)
+    # group A: slots 0(+), 2(+), 1(-) with weights 3, 2, 1 -> net +4
+    for j in (0, 1, 2):
+        acts[0, j, 0] = True
+    # group B: slots 3(-), 4(+) unit weights -> net 0, zeroed outright
+    acts[0, 3, 2] = acts[0, 4, 2] = True
+    w = np.ones((1, 6), np.int64)
+    w[0, 0], w[0, 2], w[0, 1] = 3, 2, 1
+    r = merge_weighted(cfg, acts, w)
+    assert r.actions[0, 0].any() and not r.actions[0, 1].any() \
+        and not r.actions[0, 2].any()
+    assert r.weights[0, 0] == 4
+    assert not r.actions[0, 3].any() and not r.actions[0, 4].any()
+    X = np.array([[1, 0, 1], [0, 1, 1], [1, 1, 1]], np.uint8)
+    assert np.array_equal(_oracle(cfg, r.actions, X, r.weights),
+                          _oracle(cfg, acts, X, w))
+
+
+# ---------------------------------------------------------------------------
+# prune_ranked: tolerance-gated lossy tail drop
+# ---------------------------------------------------------------------------
+
+def _separable_setup(seed=7, B=200):
+    """A model + labelled holdout where labels come from the model itself,
+    plus pure-noise clauses a ranked pass should find droppable."""
+    rng = np.random.default_rng(seed)
+    cfg = TMConfig(n_classes=3, n_clauses=10, n_features=8)
+    acts = rng.random((3, 10, 16)) < 0.12
+    X = rng.integers(0, 2, (B, 8)).astype(np.uint8)
+    y = np.argmax(_oracle(cfg, acts, X), axis=1).astype(np.int32)
+    return cfg, acts, X, y
+
+
+def test_prune_ranked_respects_tolerance():
+    cfg, acts, X, y = _separable_setup()
+    r = prune_ranked(cfg, acts, X, y, tolerance=0.05)
+    assert r.report.baseline_accuracy is not None
+    assert (r.report.pruned_accuracy
+            >= r.report.baseline_accuracy - 0.05 - 1e-12)
+    assert r.report.n_ranked == (r.report.n_clauses_before
+                                 - r.report.n_clauses_after)
+
+
+def test_prune_ranked_tolerance_one_drops_everything():
+    cfg, acts, X, y = _separable_setup(seed=8)
+    r = prune_ranked(cfg, acts, X, y, tolerance=1.0)
+    assert r.report.n_clauses_after == 0
+    with pytest.raises(ValueError, match="tolerance"):
+        prune_ranked(cfg, acts, X, y, tolerance=-0.1)
+
+
+def test_policy_chains_and_skips_ranked_without_labels():
+    cfg, acts, X, y = _separable_setup(seed=9)
+    full = PrunePolicy(tolerance=0.05).apply(cfg, acts, X=X, y=y)
+    assert full.report.stages == ("exact", "merge", "ranked")
+    assert full.report.n_clauses_after <= full.report.n_clauses_before
+    unlabelled = PrunePolicy(tolerance=0.05).apply(cfg, acts, X=X)
+    assert unlabelled.report.stages == (
+        "exact", "merge", "ranked:skipped-no-labels"
+    )
+    # the label-free passes are bit-exact, always
+    assert np.array_equal(
+        _oracle(cfg, unlabelled.actions, X, unlabelled.weights),
+        _oracle(cfg, acts, X),
+    )
+
+
+# ---------------------------------------------------------------------------
+# weighted clauses end-to-end: encode / decode / wire / every engine
+# ---------------------------------------------------------------------------
+
+def test_encode_normalizes_all_ones_weights_to_weightless():
+    rng = np.random.default_rng(2)
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=5)
+    acts = rng.random((2, 4, 10)) < 0.3
+    model = encode(cfg, acts, clause_weights=np.ones((2, 4), np.int64))
+    assert not model.weighted
+    assert model.n_bytes == encode(cfg, acts).n_bytes
+
+
+def test_weighted_encode_decode_roundtrip_places_weights_by_slot():
+    rng = np.random.default_rng(3)
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=6)
+    acts = rng.random((3, 6, 12)) < 0.25
+    w = rng.integers(1, 6, (3, 6)).astype(np.int64)
+    model = encode(cfg, acts, clause_weights=w)
+    assert model.weighted and model.n_weights > 0
+    dec_acts, dec_w = decode_weights(model)
+    X = rng.integers(0, 2, (48, 6)).astype(np.uint8)
+    assert np.array_equal(_oracle(cfg, dec_acts, X, dec_w),
+                          _oracle(cfg, acts, X, w))
+    plan = decode_to_plan(model)
+    assert plan.clause_weight is not None
+    assert np.array_equal(np.abs(plan.weighted_pol), plan.weights)
+
+
+def test_clause_weight_range_is_enforced():
+    with pytest.raises(ValueError, match=r"\[1, 65535\]"):
+        CompressedModel(
+            instructions=np.zeros(0, np.uint16), n_classes=1, n_clauses=2,
+            n_features=2, clause_weights=np.array([0]),
+        )
+
+
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+def test_weighted_execution_bit_exact_on_every_engine(engine):
+    rng = np.random.default_rng(4)
+    cfg = TMConfig(n_classes=4, n_clauses=8, n_features=9)
+    acts = rng.random((4, 8, 18)) < 0.2
+    w = rng.integers(1, 8, (4, 8)).astype(np.int64)
+    model = encode(cfg, acts, clause_weights=w)
+    X = rng.integers(0, 2, (32, 9)).astype(np.uint8)
+    assert np.array_equal(_engine_sums(engine, model, X),
+                          _oracle(cfg, acts, X, w))
+
+
+def test_weighted_popcount_bitplanes_are_multiply_free():
+    """The popcount path executes weights as shifted popcounts: plane b of
+    the 3-D selection bank holds exactly the emitting instructions whose
+    weight has bit b set, and the banks reconstruct the weights — no
+    multiply anywhere in the reduction (left_shift + popcount only)."""
+    rng = np.random.default_rng(5)
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=8)
+    acts = rng.random((3, 6, 16)) < 0.25
+    w = rng.integers(1, 7, (3, 6)).astype(np.int64)
+    model = encode(cfg, acts, clause_weights=w)
+    plan = decode_to_plan(model)
+
+    from repro.kernels.tm_popcount.ops import plan_to_popcount_operands
+    i_cap, m_cap = 128, 4
+    lit_idx, last, mpos, mneg = plan_to_popcount_operands(
+        plan, i_cap, m_cap, weight_planes=plan.weight_planes
+    )
+    assert mpos.ndim == 3 and mpos.shape[0] == plan.weight_planes
+    # plane decomposition reconstructs each emitted clause's weight
+    emitting = np.flatnonzero(last == 1)
+    wts = np.ones(i_cap, np.int64)
+    wts[: plan.n_includes] = plan.weights[plan.clause_id]
+    for t in emitting:
+        chunk, bit = t // 32, t % 32
+        rebuilt = 0
+        for b in range(plan.weight_planes):
+            sel = any(
+                (int(mpos[b, m, chunk]) >> bit) & 1
+                or (int(mneg[b, m, chunk]) >> bit) & 1
+                for m in range(m_cap)
+            )
+            rebuilt |= int(sel) << b
+        assert rebuilt == wts[t], f"instruction {t}"
+    # and the plane depth is validated: a too-shallow bank is refused
+    with pytest.raises(ValueError, match="bitplanes"):
+        plan_to_popcount_operands(plan, i_cap, m_cap, weight_planes=1)
+
+
+def test_weighted_popcount_matches_weighted_interp_oracle():
+    """popcount (bitplane path) vs interp (weight-memory path): two
+    independent weighted realizations must agree bit-for-bit."""
+    rng = np.random.default_rng(6)
+    cfg = TMConfig(n_classes=3, n_clauses=8, n_features=10)
+    acts = _messy_actions(rng, cfg)
+    w = rng.integers(1, 16, (3, 8)).astype(np.int64)
+    model = encode(cfg, acts, clause_weights=w)
+    X = rng.integers(0, 2, (64, 10)).astype(np.uint8)
+    assert np.array_equal(_engine_sums("popcount", model, X),
+                          _engine_sums("interp", model, X))
+
+
+def test_weightless_mask_packing_unchanged_by_weighted_path():
+    """All-ones weights at plane depth 1 reproduce the legacy 2-D banks
+    exactly (the weightless program is the weighted one at weight 1)."""
+    rng = np.random.default_rng(7)
+    last = (rng.random(64) < 0.3).astype(np.int32)
+    pol = np.where(rng.random(64) < 0.5, 1, -1).astype(np.int32)
+    cls = rng.integers(0, 4, 64).astype(np.int32)
+    legacy_pos, legacy_neg = pack_class_masks(last, pol, cls, 4)
+    wpos, wneg = pack_class_masks_weighted(
+        last, pol, cls, np.ones(64, np.int32), 4, 1
+    )
+    assert np.array_equal(wpos[0], legacy_pos)
+    assert np.array_equal(wneg[0], legacy_neg)
+
+
+# ---------------------------------------------------------------------------
+# capacity: the weight_planes knob + shrink diagnostics
+# ---------------------------------------------------------------------------
+
+def test_weight_planes_negotiation_and_shrink():
+    rng = np.random.default_rng(8)
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=8)
+    acts = rng.random((3, 6, 16)) < 0.2
+    w = np.full((3, 6), 5, np.int64)  # bit_length 3
+    weighted = encode(cfg, acts, clause_weights=w)
+    weightless = encode(cfg, acts)
+
+    assert model_requirements(weighted)["weight_planes"] == 3
+    assert model_requirements(weightless)["weight_planes"] == 1
+    assert "weight_planes" in QUANTA and QUANTA["weight_planes"] == 1
+    assert "weight_planes" not in HEADROOM_KNOBS  # model-derived, no slack
+
+    plan = CapacityPlan.for_models([weighted, weightless])
+    assert plan.weight_planes == 3
+    # a pruned/weightless artifact lets the envelope renegotiate DOWN
+    diags = dict(
+        (k, (prov, rec)) for k, prov, rec in
+        plan.shrink_diagnostics(weightless)
+    )
+    assert diags["weight_planes"] == (3, 1)
+    shrunk = plan.shrink_to(weightless)
+    assert shrunk.weight_planes == 1
+    assert shrunk.fits(weightless) and not shrunk.fits(weighted)
+
+
+def test_popcount_validates_weight_planes_knob():
+    rng = np.random.default_rng(9)
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=6)
+    acts = rng.random((2, 4, 12)) < 0.3
+    model = encode(cfg, acts, clause_weights=np.full((2, 4), 9, np.int64))
+    plan = dataclasses.replace(
+        CapacityPlan.for_models([model]), weight_planes=2
+    )
+    pop = make_engine("popcount", plan, implementation="xla")
+    assert any("weight_planes" in v for v in pop.model_violations(model))
+    interp = make_engine("interp", plan)
+    assert not interp.model_violations(model)  # interp reads the memory
+
+
+# ---------------------------------------------------------------------------
+# TMProgram: v1 golden fixture + v2 weighted wire
+# ---------------------------------------------------------------------------
+
+def _golden_artifact():
+    rng = np.random.default_rng(1234)
+    cfg = TMConfig(n_classes=4, n_clauses=6, n_features=16)
+    acts = rng.random((4, 6, 32)) < 0.15
+    model = encode(cfg, acts)
+    plan = CapacityPlan.for_models([model], batch_words=2)
+    return cfg, acts, TMProgram(capacity=plan, model=model)
+
+
+def test_v1_golden_fixture_bytes_are_stable():
+    """The committed pre-v2 blob: today's serializer must still emit it
+    byte-for-byte (weightless models auto-resolve to format v1)."""
+    cfg, acts, art = _golden_artifact()
+    assert art.format_version == 1
+    with open(os.path.join(DATA_DIR, "tmprogram_v1_golden.bin"), "rb") as f:
+        golden = f.read()
+    assert art.to_bytes() == golden
+
+
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+def test_v1_golden_fixture_loads_and_serves_bit_exactly(engine):
+    cfg, acts, _ = _golden_artifact()
+    with open(os.path.join(DATA_DIR, "tmprogram_v1_golden.bin"), "rb") as f:
+        art = TMProgram.from_bytes(f.read())
+    assert art.format_version == 1 and not art.model.weighted
+    rng = np.random.default_rng(42)
+    X = rng.integers(0, 2, (32, cfg.n_features)).astype(np.uint8)
+    assert np.array_equal(_engine_sums(engine, art.model, X),
+                          _oracle(cfg, acts, X))
+
+
+def test_v2_weighted_roundtrip_and_weight_crc():
+    rng = np.random.default_rng(10)
+    cfg = TMConfig(n_classes=3, n_clauses=6, n_features=8)
+    acts = rng.random((3, 6, 16)) < 0.2
+    w = rng.integers(2, 10, (3, 6)).astype(np.int64)
+    model = encode(cfg, acts, clause_weights=w)
+    art = TMProgram(CapacityPlan.for_models([model]), model)
+    assert art.format_version == 2
+    blob = art.to_bytes()
+    back = TMProgram.from_bytes(blob)
+    assert back == art
+    assert np.array_equal(back.model.clause_weights, model.clause_weights)
+    # flip a bit INSIDE the weight vector (the payload tail): the CRC
+    # must catch it exactly like a corrupted instruction
+    corrupted = bytearray(blob)
+    corrupted[-1] ^= 0x40
+    with pytest.raises(ValueError, match="checksum"):
+        TMProgram.from_bytes(bytes(corrupted))
+
+
+def test_v1_refuses_weighted_models():
+    rng = np.random.default_rng(11)
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=5)
+    acts = rng.random((2, 4, 10)) < 0.3
+    model = encode(cfg, acts, clause_weights=np.full((2, 4), 3, np.int64))
+    with pytest.raises(ValueError, match="v1 cannot carry"):
+        TMProgram(CapacityPlan.for_models([model]), model, format_version=1)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: zero-clause-class streams through the publication gate
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_passes_on_legitimate_zero_clause_class():
+    rng = np.random.default_rng(12)
+    cfg = TMConfig(n_classes=4, n_clauses=5, n_features=6)
+    acts = rng.random((4, 5, 12)) < 0.25
+    acts[1] = False  # a pruned-empty middle class: lone boundary EXTEND
+    acts[3] = False  # ... and an empty final class
+    model = encode(cfg, acts)
+    X = rng.integers(0, 2, (32, 6)).astype(np.uint8)
+    validate_roundtrip(cfg, acts, model, X)  # must NOT raise
+    assert np.array_equal(decode(model), acts)
+
+
+def test_roundtrip_refuses_misaligned_stream_cleanly():
+    """A stream whose class alignment slipped past n_classes is a
+    structured publication refusal, never an IndexError."""
+    rng = np.random.default_rng(13)
+    cfg3 = TMConfig(n_classes=3, n_clauses=4, n_features=5)
+    acts3 = rng.random((3, 4, 10)) < 0.3
+    acts3[0, 0, 0] = True  # every class non-empty
+    acts3[1, 0, 0] = True
+    acts3[2, 0, 0] = True
+    model3 = encode(cfg3, acts3)
+    # lie about the dims: same stream, two declared classes
+    bad = CompressedModel(
+        instructions=model3.instructions, n_classes=2,
+        n_clauses=4, n_features=5,
+    )
+    cfg2 = TMConfig(n_classes=2, n_clauses=4, n_features=5)
+    X = rng.integers(0, 2, (16, 5)).astype(np.uint8)
+    with pytest.raises(ValueError, match="refusing to publish") as ei:
+        validate_roundtrip(cfg2, acts3[:2], bad, X)
+    assert "class alignment" in str(ei.value)
+
+
+def test_decode_refuses_weight_count_mismatch():
+    rng = np.random.default_rng(14)
+    cfg = TMConfig(n_classes=2, n_clauses=4, n_features=5)
+    acts = rng.random((2, 4, 10)) < 0.3
+    model = encode(cfg, acts, clause_weights=np.full((2, 4), 2, np.int64))
+    short = CompressedModel(
+        instructions=model.instructions, n_classes=2, n_clauses=4,
+        n_features=5, clause_weights=model.clause_weights[:-1],
+    )
+    with pytest.raises(ValueError, match="weight vector"):
+        decode_weights(short)
+
+
+# ---------------------------------------------------------------------------
+# recal integration: Compressor(prune=...) and the controller hook
+# ---------------------------------------------------------------------------
+
+def test_compressor_runs_prune_policy_and_reports_shrink():
+    from repro.recal import Compressor
+
+    rng = np.random.default_rng(15)
+    cfg = TMConfig(n_classes=3, n_clauses=8, n_features=6)
+    acts = _messy_actions(rng, cfg)
+    state = state_from_actions(cfg, acts)
+
+    baseline = Compressor().compress(cfg, state)
+    # provision weight planes up front: merge_weighted may turn the
+    # weightless model into a (small-)weighted one
+    plan = dataclasses.replace(
+        CapacityPlan.for_models([baseline.model]), weight_planes=4
+    )
+    report = Compressor(plan=plan).compress(
+        cfg, state, prune=PrunePolicy()
+    )
+    assert report.prune is not None
+    assert report.prune.n_removed >= 1
+    assert report.model.n_bytes < baseline.model.n_bytes
+    assert report.artifact is not None
+    # the dead rows freed instruction depth the envelope can reclaim
+    assert any(k == "instruction_capacity" for k, _, _ in report.shrink)
+
+
+def test_controller_prunes_on_deploy_and_recal():
+    from repro.data.pipeline import TMDatasetSpec, booleanized_tm_dataset
+    from repro.recal import RecalController, RecalWorker
+    from repro.serve_tm import ServeCapacity, TMServer
+
+    import jax
+
+    spec = TMDatasetSpec("prune-test", 10, 3, 4, 20)
+    xb, y, booler = booleanized_tm_dataset(spec, 600, seed=0, drift=0.0)
+    cfg = TMConfig(
+        n_classes=spec.n_classes, n_clauses=spec.n_clauses,
+        n_features=booler.n_boolean_features,
+    )
+    worker = RecalWorker(cfg, key=jax.random.key(11))
+    worker.fine_tune_epochs(xb, y, epochs=3, batch=150)
+    server = TMServer(
+        ServeCapacity(feature_capacity=64, instruction_capacity=8192),
+        backend="plan",
+    )
+    # the rollback margin must absorb the prune tolerance PLUS the tiny
+    # fine-tune's own noise, or a legitimate ranked drop reads as a
+    # regression and rolls back
+    controller = RecalController(
+        server, "edge", worker,
+        buffer_batches=4, train_batch_size=128, min_buffer_rows=256,
+        regression_margin=0.1,
+        prune=PrunePolicy(tolerance=0.02),
+    )
+    controller.deploy()  # no labels: exact+merge only, still publishes
+    assert server.registry.get("edge").provenance == "deploy"
+
+    # buffer the full training distribution, so the recal fine-tune holds
+    # the model's quality and the post-swap check isolates the prune drop
+    for i in range(0, 600, 200):
+        preds = controller.observe(
+            np.asarray(xb[i:i + 200]), np.asarray(y[i:i + 200])
+        )
+    assert preds.shape == (200,)
+    event = controller.recalibrate(reason="test")
+    assert event.prune_stages[0] == "exact"
+    assert event.prune_stages[1].startswith("merge")
+    assert "ranked" in event.prune_stages[-1]
+    assert event.pruned_clauses >= 0
+    assert not event.rolled_back
+    assert isinstance(event.reclaimable, tuple)
+    # the post-swap check bounds the combined fine-tune + ranked-drop
+    # cost; the publication gate proved the pruned stream bit-exact
+    # against the pruned oracle before the swap
+    assert event.holdout_acc_after >= event.holdout_acc_before - 0.1 - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: FleetPool.warnings ring buffer
+# ---------------------------------------------------------------------------
+
+def test_fleet_pool_warnings_ring_is_bounded_and_clearable():
+    from repro.fleet import FleetPool
+
+    pool = FleetPool(max_warnings=4)
+    for i in range(10):
+        pool._warn(f"warning {i}")
+    assert len(pool.warnings) == 4
+    assert list(pool.warnings) == [f"warning {i}" for i in range(6, 10)]
+    drained = pool.clear_warnings()
+    assert drained == [f"warning {i}" for i in range(6, 10)]
+    assert len(pool.warnings) == 0
+    with pytest.raises(ValueError, match="max_warnings"):
+        FleetPool(max_warnings=0)
